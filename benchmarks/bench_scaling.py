@@ -1,0 +1,57 @@
+"""Graph-size scaling (the paper's g1..g3 observation: "acceleration from
+the GPU increases with graph size").  We reproduce the *algorithmic* side on
+CPU: matrix-closure cost vs worklist cost as the graph grows, plus the
+iteration counts that the roofline's per-iteration terms multiply into."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines import hellings_cfpq
+from repro.core import closure
+from repro.core.grammar import query1_grammar
+from repro.core.graph import ontology_graph
+from repro.core.matrices import ProductionTables, init_matrix
+
+
+def _iters(T0, tables):
+    """Fixpoint iteration count (drives total closure cost)."""
+    import jax.numpy as jnp
+    import jax
+
+    T = T0
+    it = 0
+    while True:
+        T2 = closure.dense_step(T, tables)
+        it += 1
+        if bool(jnp.array_equal(T2, T)):
+            return it
+        T = T2
+
+
+def main(rows: list[str] | None = None) -> list[str]:
+    rows = rows if rows is not None else []
+    rows.append("n_classes,n_edges,n_padded,iters,hellings_ms,dense_ms")
+    g = query1_grammar().to_cnf()
+    tables = ProductionTables.from_grammar(g)
+    for n_classes, n_inst in ((25, 50), (50, 100), (100, 250), (150, 400)):
+        graph = ontology_graph(n_classes, n_inst, seed=1)
+        t0 = time.perf_counter()
+        hellings_cfpq(graph, g)
+        t_base = time.perf_counter() - t0
+        T0 = init_matrix(graph, g)
+        closure.dense_closure(T0, tables).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        closure.dense_closure(T0, tables).block_until_ready()
+        t_dense = time.perf_counter() - t0
+        iters = _iters(T0, tables)
+        rows.append(
+            f"{n_classes},{graph.n_edges},{T0.shape[-1]},{iters},"
+            f"{t_base*1e3:.1f},{t_dense*1e3:.1f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,27 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints CSV blocks:
+  [table1-2]  Q1/Q2 over the ontology suite (paper Tables 1 & 2)
+  [scaling]   graph-size scaling + fixpoint iteration counts (g1-g3 obs.)
+  [kernels]   Boolean-matmul kernel micro-bench
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from . import bench_cfpq, bench_kernels, bench_scaling
+
+    print("[table1-2] CFPQ ontology suite (paper Tables 1-2 analog)")
+    print("\n".join(bench_cfpq.main()))
+    print()
+    print("[scaling] graph-size scaling")
+    print("\n".join(bench_scaling.main()))
+    print()
+    print("[kernels] boolean matmul micro-bench")
+    print("\n".join(bench_kernels.main()))
+
+
+if __name__ == "__main__":
+    main()

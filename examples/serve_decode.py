@@ -1,0 +1,17 @@
+"""Batched serving demo: prefill + KV-cache decode with a reduced gemma3
+(5:1 local:global attention — exercises the rolling window caches).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.argv = [
+    "serve",
+    "--arch", "gemma3-12b",
+    "--batch", "4",
+    "--prompt-len", "24",
+    "--gen", "12",
+]
+from repro.launch.serve import main  # noqa: E402
+
+main()

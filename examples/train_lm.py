@@ -1,0 +1,26 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps with
+checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py
+
+Equivalent to:
+    python -m repro.launch.train --arch smollm-360m --steps 300 \
+        --batch 8 --seq 128 --ckpt-dir /tmp/repro_lm_run
+
+Kill it at any point and re-run — it resumes from the last checkpoint and
+reproduces the uninterrupted run exactly (stateless data pipeline).
+"""
+import sys
+
+sys.argv = [
+    "train",
+    "--arch", "smollm-360m",
+    "--steps", "300",
+    "--batch", "8",
+    "--seq", "128",
+    "--ckpt-dir", "/tmp/repro_lm_run",
+    "--ckpt-every", "100",
+]
+from repro.launch.train import main  # noqa: E402
+
+main()

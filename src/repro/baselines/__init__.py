@@ -1,0 +1,1 @@
+from .hellings import hellings_cfpq  # noqa: F401

@@ -1,0 +1,187 @@
+"""Query semantics on top of the closure (paper Sections 4-5).
+
+Relational semantics: R_A = {(i, j) | A in T^cf[i, j]}  (Theorem 2).
+
+Single-path semantics (Section 5): annotate every nonterminal entry with ONE
+witness path length, frozen at first discovery — if A enters a[i,j] at
+iteration p via A -> B C through node k, then l_A = l_B + l_C with the
+lengths recorded for those operands, and l_A is never overwritten later.
+A witness path of exactly that length is then reconstructed by recursive
+splitting (``extract_path``).
+
+Implementation note: the length annotation is a min-plus-style matrix product
+*gated by novelty*.  We compute candidate lengths with a chunked min-plus
+contraction (the (n, n, n) broadcast is tiled over k to bound memory) and
+write them only where the Boolean closure just discovered a new entry, which
+reproduces the paper's freeze-on-first-discovery rule exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grammar import CNFGrammar
+from .graph import Graph
+from .matrices import ProductionTables, init_matrix, padded_size
+
+INF = jnp.float32(jnp.inf)
+
+
+def _minplus(lhs: jnp.ndarray, rhs: jnp.ndarray, chunk: int = 64):
+    """Batched min-plus matmul: out[p,i,j] = min_k lhs[p,i,k] + rhs[p,k,j].
+
+    Tiled over k with a fori_loop so peak memory is (P, n, chunk, n)."""
+    P, n, _ = lhs.shape
+    n_chunks = n // chunk if n % chunk == 0 else -(-n // chunk)
+    pad = n_chunks * chunk - n
+    if pad:
+        lhs = jnp.pad(lhs, ((0, 0), (0, 0), (0, pad)), constant_values=jnp.inf)
+        rhs = jnp.pad(rhs, ((0, 0), (0, pad), (0, 0)), constant_values=jnp.inf)
+
+    def body(c, acc):
+        lk = jax.lax.dynamic_slice_in_dim(lhs, c * chunk, chunk, axis=2)
+        rk = jax.lax.dynamic_slice_in_dim(rhs, c * chunk, chunk, axis=1)
+        cand = jnp.min(lk[:, :, :, None] + rk[:, None, :, :], axis=2)
+        return jnp.minimum(acc, cand)
+
+    init = jnp.full((P, n, n), jnp.inf, jnp.float32)
+    return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+@partial(jax.jit, static_argnames=("tables", "max_iters"))
+def single_path_closure(
+    T: jnp.ndarray, tables: ProductionTables, max_iters: int | None = None
+):
+    """Returns (T^cf bool (N,n,n), lengths f32 (N,n,n) with inf = absent)."""
+    if tables.n_prods == 0:
+        L = jnp.where(T, 1.0, jnp.inf).astype(jnp.float32)
+        return T, L
+    a_idx = jnp.asarray(tables.a_idx, jnp.int32)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = max_iters if max_iters is not None else T.shape[-1] * T.shape[0]
+    L0 = jnp.where(T, 1.0, jnp.inf).astype(jnp.float32)
+
+    def cond(state):
+        _, _, changed, it = state
+        return changed & (it < limit)
+
+    def body(state):
+        T, L, _, it = state
+        cand = _minplus(L[b_idx], L[c_idx])  # (P, n, n)
+        cand_a = (
+            jnp.full((tables.n_nonterms, *cand.shape[1:]), jnp.inf)
+            .at[a_idx]
+            .min(cand)
+        )
+        new_mask = jnp.isfinite(cand_a) & ~T
+        L_next = jnp.where(new_mask, cand_a, L)  # freeze-on-first-discovery
+        T_next = T | new_mask
+        return T_next, L_next, jnp.any(new_mask), it + 1
+
+    T, L, _, _ = jax.lax.while_loop(cond, body, (T, L0, jnp.bool_(True), 0))
+    return T, L
+
+
+# ---------------------------------------------------------------------- #
+# Witness-path reconstruction ("simple search" of Theorem 5), host-side.
+# ---------------------------------------------------------------------- #
+
+
+def extract_path(
+    L: np.ndarray,
+    graph: Graph,
+    g: CNFGrammar,
+    nonterm: str,
+    i: int,
+    j: int,
+) -> list[tuple[int, str, int]]:
+    """Reconstruct a path i ->* j with l(pi) derivable from ``nonterm`` whose
+    length equals the recorded annotation.  Raises KeyError if (i,j) not in
+    R_A."""
+    L = np.asarray(L)
+    edge_set: dict[tuple[int, int], list[str]] = {}
+    for s, x, d in graph.edges:
+        edge_set.setdefault((s, d), []).append(x)
+    a0 = g.index_of(nonterm)
+    if not np.isfinite(L[a0, i, j]):
+        raise KeyError(f"({nonterm}, {i}, {j}) not in the relation")
+    by_lhs: dict[int, list[tuple[int, int]]] = {}
+    for a, b, c in g.binary_prods:
+        by_lhs.setdefault(a, []).append((b, c))
+    term_by_lhs: dict[int, list[str]] = {}
+    for x, lhss in g.term_prods.items():
+        for a in lhss:
+            term_by_lhs.setdefault(a, []).append(x)
+
+    out: list[tuple[int, str, int]] = []
+
+    def rec(a: int, i: int, j: int, length: float) -> None:
+        if length == 1.0:
+            for x in term_by_lhs.get(a, ()):  # A -> x with edge (i, x, j)
+                if x in edge_set.get((i, j), ()):
+                    out.append((i, x, j))
+                    return
+            raise AssertionError("length-1 witness without a matching edge")
+        for b, c in by_lhs.get(a, ()):
+            lb = L[b, i, :]
+            lc = L[c, :, j]
+            ks = np.nonzero(np.isfinite(lb) & np.isfinite(lc) & (lb + lc == length))[0]
+            if ks.size:
+                k = int(ks[0])
+                rec(b, i, k, float(lb[k]))
+                rec(c, k, j, float(lc[k]))
+                return
+        raise AssertionError("no consistent split — annotation invariant broken")
+
+    rec(a0, i, j, float(L[a0, i, j]))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Top-level query API.
+# ---------------------------------------------------------------------- #
+
+
+def evaluate_relational(
+    graph: Graph,
+    g: CNFGrammar,
+    start: str,
+    engine: str = "dense",
+) -> set[tuple[int, int]]:
+    """Full relational CFPQ: returns R_start restricted to real nodes,
+    including the (m, m) pairs contributed by a nullable start symbol."""
+    from . import closure as _closure
+    from .matrices import relations_from_matrix
+
+    tables = ProductionTables.from_grammar(g)
+    T0 = init_matrix(graph, g)
+    fn = {
+        "dense": _closure.dense_closure,
+        "frontier": _closure.frontier_closure,
+        "bitpacked": _closure.bitpacked_closure,
+    }[engine]
+    T = fn(T0, tables)
+    rel = relations_from_matrix(np.asarray(T), g, graph.n_nodes)[start]
+    if start in g.nullable:
+        rel |= {(m, m) for m in range(graph.n_nodes)}
+    return rel
+
+
+def evaluate_single_path(
+    graph: Graph, g: CNFGrammar, start: str
+) -> dict[tuple[int, int], list[tuple[int, str, int]]]:
+    """Single-path CFPQ: one witness path per (i, j) in R_start."""
+    tables = ProductionTables.from_grammar(g)
+    T0 = init_matrix(graph, g)
+    T, L = single_path_closure(T0, tables)
+    L = np.asarray(L)
+    a0 = g.index_of(start)
+    n = graph.n_nodes
+    out = {}
+    for i, j in zip(*np.nonzero(np.asarray(T)[a0, :n, :n])):
+        out[(int(i), int(j))] = extract_path(L, graph, g, start, int(i), int(j))
+    return out

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: bitpacked Boolean matrix multiplication.
+
+Semiring: C[b, i, jw] = OR_{k in [n] : bit_k(lhs[b, i])} rhs[b, k, jw]
+with every matrix stored as uint32 words packing 32 columns.
+
+TPU mapping (DESIGN.md §3): this is the adaptation of the paper's CSR/
+CUSPARSE sparse path.  TPUs have no sparse GEMM, so sparsity is exploited as
+*density of representation*: 1 bit per Boolean entry means 32x less HBM
+traffic than f32 and 8x less than u8, which is what matters in the
+memory-bound closure regime.  The kernel runs on the VPU (bitwise AND/OR on
+(8,128) vregs); the compute-bound regime is instead served by the MXU
+saturation path in core/closure.py.
+
+Tiling: grid (B, n/TI, w/TW, n/TK); each step loads
+  lhs block (TI, TK/32)   — contraction bits for TI rows,
+  rhs block (TK, TW)      — TK packed rows,
+and accumulates an OR into the resident out block (TI, TW).  The k axis is
+the innermost grid dim so the output block stays in VMEM across the whole
+contraction (standard Pallas accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitmm_kernel(lhs_ref, rhs_ref, out_ref, *, tk: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lhs = lhs_ref[0]  # (TI, TK // 32) uint32
+    acc = out_ref[0]  # (TI, TW) uint32
+
+    def body(k, acc):
+        word = lhs[:, k // 32]  # (TI,) uint32 — bits for contraction col k
+        bit = (word >> (k % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        mask = jnp.uint32(0) - bit  # all-ones where the bit is set
+        row = rhs_ref[0, k, :]  # (TW,) uint32
+        return acc | (mask[:, None] & row[None, :])
+
+    out_ref[0] = jax.lax.fori_loop(0, tk, body, acc, unroll=8)
+
+
+def _bitmm_or_kernel(lhs_ref, rhs_ref, acc_ref, out_ref, *, tk: int):
+    """Fused C = acc | (lhs x rhs): the closure-step epilogue folded into
+    the contraction — the accumulator is read once and or-written in VMEM
+    instead of a separate HBM round trip for the union."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    lhs = lhs_ref[0]
+    acc = out_ref[0]
+
+    def body(k, acc):
+        word = lhs[:, k // 32]
+        bit = (word >> (k % 32).astype(jnp.uint32)) & jnp.uint32(1)
+        mask = jnp.uint32(0) - bit
+        row = rhs_ref[0, k, :]
+        return acc | (mask[:, None] & row[None, :])
+
+    out_ref[0] = jax.lax.fori_loop(0, tk, body, acc, unroll=8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ti", "tw", "tk", "interpret")
+)
+def bitmm_or_pallas(
+    lhs_packed: jnp.ndarray,
+    rhs_packed: jnp.ndarray,
+    acc_packed: jnp.ndarray,
+    *,
+    ti: int = 128,
+    tw: int = 128,
+    tk: int = 4096,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = acc | (lhs x rhs) over the AND/OR semiring on packed words."""
+    B, n, w = lhs_packed.shape
+    assert rhs_packed.shape == (B, n, w) and acc_packed.shape == (B, n, w)
+    assert n % ti == 0 and n % tk == 0 and w % tw == 0 and tk % 32 == 0
+
+    grid = (B, n // ti, w // tw, n // tk)
+    kernel = functools.partial(_bitmm_or_kernel, tk=tk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ti, tk // 32), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, tk, tw), lambda b, i, j, k: (b, k, j)),
+            pl.BlockSpec((1, ti, tw), lambda b, i, j, k: (b, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ti, tw), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n, w), jnp.uint32),
+        interpret=interpret,
+    )(lhs_packed, rhs_packed, acc_packed)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ti", "tw", "tk", "interpret")
+)
+def bitmm_pallas(
+    lhs_packed: jnp.ndarray,
+    rhs_packed: jnp.ndarray,
+    *,
+    ti: int = 128,
+    tw: int = 128,
+    tk: int = 4096,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C = lhs x rhs over the AND/OR semiring on packed words.
+
+    Shapes: lhs (B, n, w), rhs (B, n, w), out (B, n, w) with w = n // 32.
+    ``n`` must divide by max(ti, tk) and ``w`` by tw (ops.py picks tiles).
+    """
+    B, n, w = lhs_packed.shape
+    assert rhs_packed.shape == (B, n, w), (lhs_packed.shape, rhs_packed.shape)
+    assert n % ti == 0 and n % tk == 0 and w % tw == 0 and tk % 32 == 0
+
+    grid = (B, n // ti, w // tw, n // tk)
+    kernel = functools.partial(_bitmm_kernel, tk=tk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ti, tk // 32), lambda b, i, j, k: (b, i, k)),
+            pl.BlockSpec((1, tk, tw), lambda b, i, j, k: (b, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ti, tw), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n, w), jnp.uint32),
+        interpret=interpret,
+    )(lhs_packed, rhs_packed)

@@ -1,0 +1,39 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``bitmm`` picks legal tile sizes for the input shape and falls back to
+interpret mode off-TPU (this container is CPU-only; interpret mode executes
+the kernel body in Python per grid step, which validates correctness of the
+exact TPU program).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bitmm import bitmm_pallas
+from . import ref as _ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+#: Above this many packed words per matrix the interpret-mode kernel is too
+#: slow to be useful on CPU; transparently use the jnp oracle instead (the
+#: TPU program is still exercised by the kernel test sweep).
+_INTERPRET_ELEMS_BUDGET = 1 << 22
+
+
+def _pick_tiles(n: int, w: int) -> tuple[int, int, int]:
+    ti = 128 if n % 128 == 0 else n
+    tw = 128 if w % 128 == 0 else w
+    tk = 4096 if n % 4096 == 0 else n
+    return ti, tw, tk
+
+
+def bitmm(lhs_packed: jnp.ndarray, rhs_packed: jnp.ndarray) -> jnp.ndarray:
+    """Bitpacked Boolean matmul: (B, n, w) x (B, n, w) -> (B, n, w)."""
+    B, n, w = lhs_packed.shape
+    if not _ON_TPU and B * n * w > _INTERPRET_ELEMS_BUDGET:
+        return _ref.bitmm_ref(lhs_packed, rhs_packed)
+    ti, tw, tk = _pick_tiles(n, w)
+    return bitmm_pallas(
+        lhs_packed, rhs_packed, ti=ti, tw=tw, tk=tk, interpret=not _ON_TPU
+    )

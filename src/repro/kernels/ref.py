@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.matrices import pack_bits, unpack_bits
+
+
+def bitmm_ref(lhs_packed: jnp.ndarray, rhs_packed: jnp.ndarray) -> jnp.ndarray:
+    """Bitpacked Boolean matmul oracle.
+
+    lhs_packed: (B, n, w) uint32 — row i's *contraction* bits packed along k.
+    rhs_packed: (B, n, w) uint32 — row k's *output* bits packed along j.
+    returns    (B, n, w) uint32 with C[b,i,:] = OR_{k : lhs[b,i,k]} rhs[b,k,:].
+
+    Computed by unpacking to 0/1 f32, a saturating matmul, and repacking —
+    exact for Boolean inputs (f32 accumulation cannot lose positivity).
+    """
+    n = rhs_packed.shape[-2]
+    lhs = unpack_bits(lhs_packed, n).astype(jnp.float32)
+    rhs = unpack_bits(rhs_packed, n).astype(jnp.float32)
+    prod = jnp.einsum("bik,bkj->bij", lhs, rhs) > 0
+    return pack_bits(prod)
+
+
+def bitmm_or_ref(
+    lhs_packed: jnp.ndarray, rhs_packed: jnp.ndarray, acc_packed: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused C = acc | (lhs x rhs) oracle (the closure-step epilogue)."""
+    return acc_packed | bitmm_ref(lhs_packed, rhs_packed)

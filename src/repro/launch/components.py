@@ -1,0 +1,260 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Roofline component cells.
+
+XLA's cost_analysis counts while/scan bodies ONCE regardless of trip count
+(verified empirically), so whole-step numbers for scanned programs are
+meaningless.  Instead we lower each program's loop bodies as standalone
+cells and compose:
+
+  LM train step  = n_micro * ( n_blocks * [block fwd (remat recompute)
+                                           + block fwd+bwd]
+                               + head fwd+bwd )  +  optimizer update
+  LM prefill     = n_blocks * block fwd + head fwd
+  LM decode      = whole step (unrolled, loop-free -> exact as-is)
+  GNN / recsys   = whole step (loop-free)
+  CFPQ           = per-iteration step (reported per iteration; iteration
+                   counts come from the benchmark runs)
+
+Components are lowered with attn_chunk == seq_len so the flash-attention
+chunk scan disappears from the counting variant (FLOPs identical; the HBM
+bytes differ by the score-tensor traffic, noted in EXPERIMENTS.md).
+
+Writes experiments/components/<arch>__<shape>__<mesh>__<name>.json with the
+same schema as dryrun.py plus a "multiplier" field.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "../../../experiments/components"
+)
+
+
+def _lm_components(arch: str, shape_name: str, mesh):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import registry
+    from repro.launch import specs
+    from repro.models import transformer as tf
+    from repro.shard.plans import MeshPlan
+    from repro.train import optimizer as opt
+
+    SDS = jax.ShapeDtypeStruct
+    cfg0 = registry.get_config(arch)
+    shape = next(s for s in registry.get_shapes(arch) if s.name == shape_name)
+    plan = MeshPlan.from_mesh(mesh)
+    seq = shape.dim("seq_len")
+    cfg = dataclasses.replace(cfg0, attn_chunk=seq)
+    n_blocks, e = tf._block_counts(cfg)
+
+    if shape.kind == "train":
+        mb = shape.dim("global_batch") // specs.N_MICRO
+        train = True
+    elif shape.kind == "prefill":
+        mb = shape.dim("global_batch")
+        train = False
+    else:
+        raise ValueError(shape.kind)
+
+    low_mem = arch in specs._LOW_MEM_ARCHS
+    pdt = jnp.bfloat16 if (low_mem or not train) else jnp.float32
+    params = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    params = specs._cast_tree(params, pdt) if pdt != jnp.float32 else params
+    pspecs = tf.param_specs(cfg, plan)
+
+    # single-block structs: drop the leading n_blocks dim
+    bp = jax.tree.map(lambda s: SDS(s.shape[1:], s.dtype), params["blocks"])
+    bspec = jax.tree.map(
+        lambda p: P(*tuple(p)[1:]),
+        pspecs["blocks"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    act_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = SDS((mb, seq, cfg.d_model), act_dt)
+    xspec = P(plan.batch, None, None)
+
+    def block_fwd(bp_, x_):
+        y, aux = tf.apply_block(bp_, x_, cfg, plan)
+        return y.astype(jnp.float32).sum() + aux
+
+    def block_fwdbwd(bp_, x_):
+        return jax.grad(block_fwd, argnums=(0, 1))(bp_, x_)
+
+    ns = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda v: isinstance(v, P) or v is None,
+    )
+    comps = []
+    if train:
+        comps.append(
+            ("block_fwd", block_fwd, (bp, x), (ns(bspec), ns(xspec)),
+             specs.N_MICRO * n_blocks)
+        )
+        comps.append(
+            ("block_fwdbwd", block_fwdbwd, (bp, x), (ns(bspec), ns(xspec)),
+             specs.N_MICRO * n_blocks)
+        )
+
+        head_p = {
+            "embed": params["embed"],
+            "unembed": params["unembed"],
+            "final_norm": params["final_norm"],
+        }
+        head_spec = {k: pspecs[k] for k in head_p}
+        toks = SDS((mb, seq), jnp.int32)
+
+        def head_fwdbwd(hp, tokens, targets):
+            def f(hp):
+                xx = hp["embed"].astype(act_dt)[tokens] * jnp.asarray(
+                    cfg.d_model**0.5, act_dt
+                )
+                return tf.lm_head_loss(hp, xx, targets, cfg)
+
+            return jax.grad(f)(hp)
+
+        comps.append(
+            ("head_fwdbwd", head_fwdbwd, (head_p, toks, toks),
+             (ns(head_spec), ns(P(plan.batch, None)), ns(P(plan.batch, None))),
+             specs.N_MICRO)
+        )
+
+        opt_cfg = specs._lm_opt_cfg(cfg)
+        state = jax.eval_shape(lambda p: opt.init_opt_state(p, opt_cfg), params)
+        ospec = opt.opt_state_specs(
+            pspecs, opt_cfg, params=params,
+            data_size=plan.data_size, model_size=plan.model_size,
+        )
+        grads = specs._cast_tree(params, jnp.float32)
+
+        def opt_step(p, g, s):
+            return opt.apply_updates(p, g, s, opt_cfg)
+
+        comps.append(
+            ("opt", opt_step, (params, grads, state),
+             (ns(pspecs), ns(pspecs), ns(ospec)), 1)
+        )
+    else:  # prefill
+        def pf_block(bp_, x_):
+            y, _ = tf.apply_block(bp_, x_, cfg, plan)
+            return y
+
+        comps.append(
+            ("block_fwd", pf_block, (bp, x), (ns(bspec), ns(xspec)), n_blocks)
+        )
+        head_p = {
+            "embed": params["embed"],
+            "unembed": params["unembed"],
+            "final_norm": params["final_norm"],
+        }
+        head_spec = {k: pspecs[k] for k in head_p}
+        toks = SDS((mb, seq), jnp.int32)
+
+        def head_fwd(hp, tokens):
+            xx = hp["embed"].astype(act_dt)[tokens] * jnp.asarray(
+                cfg.d_model**0.5, act_dt
+            )
+            xx = xx[:, -1:]
+            from repro.models.common import rms_norm
+
+            xx = rms_norm(xx, hp["final_norm"], cfg.norm_eps)
+            return jnp.einsum("bsd,dv->bsv", xx, hp["unembed"].astype(act_dt))
+
+        comps.append(
+            ("head_fwd", head_fwd, (head_p, toks),
+             (ns(head_spec), ns(P(plan.batch, None))), 1)
+        )
+    return comps
+
+
+def _cfpq_components(shape_name: str, mesh):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import registry
+    from repro.core import closure
+    from repro.launch import specs
+    from repro.shard.plans import MeshPlan
+
+    plan = MeshPlan.from_mesh(mesh)
+    g, tables = specs.cfpq_grammar_tables()
+    shape = next(
+        s for s in registry.get_shapes("cfpq") if s.name == shape_name
+    )
+    n = shape.dim("n_nodes")
+    T = jax.ShapeDtypeStruct((g.n_nonterms, n, n), jnp.bool_)
+    row = (plan.pod_axis, plan.data_axis) if plan.pod_axis else plan.data_axis
+    spec = NamedSharding(mesh, P(None, row, plan.model_axis))
+    return [
+        (
+            "iteration",
+            lambda t: closure.dense_step(t, tables),
+            (T,),
+            (spec,),
+            1,
+        )
+    ]
+
+
+def run(arch: str, shape: str, mesh_kind: str, out_dir: str):
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import hlo as hlo_mod
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    if arch == "cfpq":
+        comps = _cfpq_components(shape, mesh)
+    else:
+        comps = _lm_components(arch, shape, mesh)
+    os.makedirs(out_dir, exist_ok=True)
+    for name, fn, args, in_sh, mult in comps:
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = hlo_mod.collective_stats(compiled.as_text(), n_dev)
+        rec = {
+            "arch": arch,
+            "shape": shape,
+            "mesh": mesh_kind,
+            "component": name,
+            "multiplier": mult,
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "collectives": coll,
+            "compile_s": round(time.time() - t0, 2),
+        }
+        tag = f"{arch}__{shape}__{mesh_kind}__{name}"
+        with open(os.path.join(out_dir, f"{tag}.json"), "w") as fh:
+            json.dump(rec, fh, indent=1)
+        print(
+            f"[components] {tag} x{mult} flops={rec['flops']:.3e} "
+            f"coll={coll['_total']['moved_bytes']:.3e}B"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.mesh, args.out or os.path.normpath(OUT_DIR))
+
+
+if __name__ == "__main__":
+    main()

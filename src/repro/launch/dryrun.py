@@ -1,0 +1,176 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analysis.
+
+MUST be run as its own process (the two lines above must execute before any
+jax initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --jobs 4
+
+Single-cell mode writes experiments/dryrun/<arch>__<shape>__<mesh>.json.
+``--all`` orchestrates one subprocess per cell (isolation: a pathological
+cell cannot take down the sweep) with bounded parallelism.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str, engine=None):
+    import jax
+
+    from repro.configs import registry
+    from repro.launch import specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import hlo as hlo_mod
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    kw = {"engine": engine} if engine else {}
+    cell = specs.build_cell(arch, shape, mesh, **kw)
+    lowered = specs.lower_cell(cell)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = hlo_mod.collective_stats(hlo_text, n_dev)
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "n_devices": int(n_dev),
+        "engine": engine,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "note": cell.note,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_kind}" + (f"__{engine}" if engine else "")
+    path = os.path.join(out_dir, f"{tag}.json")
+    with open(path, "w") as fh:
+        json.dump(result, fh, indent=1)
+    print(f"[dryrun] OK {tag}  compile={t_compile:.1f}s "
+          f"temp={result['memory']['temp_bytes']}  flops={result['cost']['flops']}")
+    print(json.dumps(result["memory"]))
+    return result
+
+
+def iter_jobs(meshes=("single", "multi")):
+    from repro.configs import registry
+
+    jobs, skips = [], []
+    for arch, shape, skip in registry.all_cells():
+        for mesh_kind in meshes:
+            if skip:
+                skips.append((arch, shape.name, mesh_kind, skip))
+            else:
+                jobs.append((arch, shape.name, mesh_kind))
+    # the paper's CFPQ workload on the production meshes
+    for shape in ("closure_64k", "closure_256k"):
+        for mesh_kind in meshes:
+            jobs.append(("cfpq", shape, mesh_kind))
+    return jobs, skips
+
+
+def orchestrate(jobs, out_dir: str, n_jobs: int, timeout: int = 3600):
+    running: list[tuple[subprocess.Popen, tuple]] = []
+    pending = list(jobs)
+    failures = []
+    done = 0
+    while pending or running:
+        while pending and len(running) < n_jobs:
+            arch, shape, mesh_kind = pending.pop(0)
+            tag = f"{arch}__{shape}__{mesh_kind}"
+            if os.path.exists(os.path.join(out_dir, f"{tag}.json")):
+                done += 1
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                "--out", out_dir,
+            ]
+            env = dict(os.environ)
+            env.pop("XLA_FLAGS", None)
+            p = subprocess.Popen(
+                cmd, env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                text=True,
+            )
+            running.append((p, (arch, shape, mesh_kind), time.time()))
+        still = []
+        for p, job, t0 in running:
+            rc = p.poll()
+            if rc is None:
+                if time.time() - t0 > timeout:
+                    p.kill()
+                    failures.append((job, "timeout"))
+                else:
+                    still.append((p, job, t0))
+            elif rc != 0:
+                out = p.stdout.read() if p.stdout else ""
+                failures.append((job, out[-2000:]))
+                print(f"[dryrun] FAIL {job}:\n{out[-2000:]}")
+            else:
+                done += 1
+                print(f"[dryrun] done {job} ({done} total)")
+        running = still
+        time.sleep(2)
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--engine", default=None, help="cfpq engine override")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out or os.path.normpath(OUT_DIR)
+    if args.all:
+        jobs, skips = iter_jobs()
+        for s in skips:
+            print(f"[dryrun] SKIP {s[0]} x {s[1]} ({s[2]}): {s[3]}")
+        failures = orchestrate(jobs, out_dir, args.jobs)
+        if failures:
+            print(f"[dryrun] {len(failures)} FAILURES")
+            for j, why in failures:
+                print(" ", j, why.splitlines()[-1] if why else "")
+            sys.exit(1)
+        print(f"[dryrun] all {len(jobs)} cells passed; {len(skips)} noted skips")
+    else:
+        run_cell(args.arch, args.shape, args.mesh, out_dir, args.engine)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill a batch of prompts, decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the serving path every LM decode dry-run cell lowers: rolling
+window caches for local layers, greedy sampling, per-step latency stats.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.configs.reduce import reduce_config
+    from repro.models import transformer as tf
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg)
+    max_seq = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    cache = tf.init_cache(cfg, args.batch, max_seq)
+    step = jax.jit(lambda p, c, t, pos: tf.serve_step(p, c, t, pos, cfg))
+
+    # prefill: feed prompt tokens through the decode path (cache warmup)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t : t + 1], jnp.int32(t))
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    # greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    lat = []
+    for t in range(args.prompt_len, max_seq):
+        t0 = time.time()
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        jax.block_until_ready(tok)
+        lat.append(time.time() - t0)
+        out_tokens.append(np.asarray(tok)[:, 0])
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] arch={cfg.arch_id} batch={args.batch}")
+    print(f"[serve] prefill {args.prompt_len} tokens: {t_prefill*1000:.0f}ms")
+    print(
+        f"[serve] decode latency p50={np.median(lat)*1000:.1f}ms "
+        f"p95={np.percentile(lat, 95)*1000:.1f}ms"
+    )
+    print(f"[serve] generated token ids (first row): {gen[0].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

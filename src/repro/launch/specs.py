@@ -1,0 +1,455 @@
+"""Per-(arch x shape x mesh) lowering specs: the step function, its
+ShapeDtypeStruct inputs, and in/out shardings.
+
+``build_cell(arch_id, shape_name, mesh)`` returns a ``Cell`` with everything
+``jax.jit(...).lower(...)`` needs — no device allocation anywhere (pure
+eval_shape / ShapeDtypeStruct), so full-size 400B-param cells lower on CPU.
+
+Dtype/memory policy (DESIGN.md):
+  * dense LMs train with f32 master params + f32 moments;
+  * the MoE giants (llama4 400B, qwen3 235B) train with bf16 params and
+    int8 blockwise moments (train/optimizer.py) — the fully-sharded state
+    is the only way those fit 16G-HBM chips at 256 devices;
+  * all serving is bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    CFPQConfig,
+    GNNConfig,
+    RecSysConfig,
+    ShapeSpec,
+    TransformerConfig,
+)
+from repro.configs import registry
+from repro.shard.plans import MeshPlan
+from repro.train import optimizer as opt, trainer
+
+SDS = jax.ShapeDtypeStruct
+
+#: archs whose optimizer state must be low-precision to fit HBM
+_LOW_MEM_ARCHS = {"llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b"}
+
+import os as _os
+
+N_MICRO = int(_os.environ.get("REPRO_N_MICRO", "8"))  # LM train microbatches
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeSpec
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+    note: str = ""
+    mesh: Any = None
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def _cast_tree(sds_tree, dtype):
+    return jax.tree.map(
+        lambda s: SDS(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else s,
+        sds_tree,
+    )
+
+
+def _pad(n: int, mult: int = 512) -> int:
+    return -(-n // mult) * mult
+
+
+# ---------------------------------------------------------------------- #
+# LM cells
+# ---------------------------------------------------------------------- #
+
+
+def _lm_opt_cfg(cfg: TransformerConfig) -> opt.OptimizerConfig:
+    if cfg.arch_id in _LOW_MEM_ARCHS:
+        return opt.OptimizerConfig(moment_dtype="int8")
+    return opt.OptimizerConfig()
+
+
+def _lm_train_cell(cfg: TransformerConfig, shape: ShapeSpec, mesh) -> Cell:
+    from repro.models import transformer as tf
+
+    plan = MeshPlan.from_mesh(mesh)
+    seq, gbatch = shape.dim("seq_len"), shape.dim("global_batch")
+    mb = gbatch // N_MICRO
+    assert mb % (plan.pod_size * plan.data_size) == 0, (mb, plan)
+
+    params = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    if cfg.arch_id in _LOW_MEM_ARCHS:
+        params = _cast_tree(params, jnp.bfloat16)
+    opt_cfg = _lm_opt_cfg(cfg)
+    opt_state = jax.eval_shape(lambda p: opt.init_opt_state(p, opt_cfg), params)
+    batch = {
+        "tokens": SDS((N_MICRO, mb, seq), jnp.int32),
+        "targets": SDS((N_MICRO, mb, seq), jnp.int32),
+    }
+    pspecs = tf.param_specs(cfg, plan)
+    ospecs = opt.opt_state_specs(
+        pspecs, opt_cfg, params=params,
+        data_size=plan.data_size, model_size=plan.model_size,
+    )
+    bspec = {k: P(None, plan.batch, None) for k in batch}
+    step = trainer.make_train_step(cfg, opt_cfg, n_micro=N_MICRO, plan=plan)
+    return Cell(
+        cfg.arch_id,
+        shape,
+        step,
+        (params, opt_state, batch),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspec)),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+
+
+def _lm_prefill_cell(cfg: TransformerConfig, shape: ShapeSpec, mesh) -> Cell:
+    from repro.models import transformer as tf
+
+    plan = MeshPlan.from_mesh(mesh)
+    seq, batch = shape.dim("seq_len"), shape.dim("global_batch")
+    params = _cast_tree(
+        jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg)),
+        jnp.bfloat16,
+    )
+    pspecs = tf.param_specs(cfg, plan)
+    tokens = SDS((batch, seq), jnp.int32)
+    fn = partial(tf.prefill_step, cfg=cfg, plan=plan)
+    return Cell(
+        cfg.arch_id,
+        shape,
+        lambda p, t: fn(p, t),
+        (params, tokens),
+        (_ns(mesh, pspecs), NamedSharding(mesh, P(plan.batch, None))),
+        NamedSharding(mesh, P(plan.batch, plan.tp_dim(cfg.vocab))),
+    )
+
+
+def _lm_decode_cell(cfg: TransformerConfig, shape: ShapeSpec, mesh) -> Cell:
+    from repro.models import transformer as tf
+
+    plan = MeshPlan.from_mesh(mesh)
+    seq, batch = shape.dim("seq_len"), shape.dim("global_batch")
+    seq_shard = batch == 1  # long-context: shard the cache over sequence
+    params = _cast_tree(
+        jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg)),
+        jnp.bfloat16,
+    )
+    pspecs = tf.param_specs(cfg, plan, decode=True)
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, batch, seq))
+    cspecs = tf.cache_specs(cfg, plan, seq_shard=seq_shard)
+    if seq_shard:
+        # window caches of local layers stay unsharded in seq if too small
+        cspecs = [
+            {
+                k: (
+                    s
+                    if cache[i][k].shape[1] % (plan.pod_size * plan.data_size) == 0
+                    else P(None, None, None, plan.model_axis)
+                )
+                for k, s in spec.items()
+            }
+            for i, spec in enumerate(cspecs)
+        ]
+    tokens = SDS((batch, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    tok_spec = P(plan.batch, None) if not seq_shard else P(None, None)
+    fn = lambda p, c, t, q: tf.serve_step(p, c, t, q, cfg)
+    logits_spec = P(
+        plan.batch if not seq_shard else None, plan.tp_dim(cfg.vocab)
+    )
+    return Cell(
+        cfg.arch_id,
+        shape,
+        fn,
+        (params, cache, tokens, pos),
+        (
+            _ns(mesh, pspecs),
+            _ns(mesh, cspecs),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+        ),
+        (NamedSharding(mesh, logits_spec), _ns(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# GNN cells
+# ---------------------------------------------------------------------- #
+
+_GNN_DOUT = {"gcn": None, "meshgraphnet": 3, "equiformer_v2": 1, "mace": 1}
+
+
+def _gnn_batch_struct(cfg: GNNConfig, shape: ShapeSpec):
+    dims = dict(shape.dims)
+    if shape.kind == "graph_sampled":
+        from repro.models.gnn.common import sampled_sizes
+
+        n, e = sampled_sizes(dims["batch_nodes"], (dims["fanout1"], dims["fanout2"]))
+        d_feat = dims["d_feat"]
+    elif shape.kind == "graph_batched":
+        n = dims["n_nodes"] * dims["batch"]
+        e = dims["n_edges"] * dims["batch"]
+        d_feat = dims["d_feat"]
+    else:
+        n, e, d_feat = dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+    n, e = _pad(n), _pad(e)
+    batch = {
+        "node_feat": SDS((n, d_feat), jnp.float32),
+        "edge_src": SDS((e,), jnp.int32),
+        "edge_dst": SDS((e,), jnp.int32),
+        "node_mask": SDS((n,), jnp.float32),
+        "edge_mask": SDS((e,), jnp.float32),
+    }
+    if cfg.model == "gcn":
+        batch["labels"] = SDS((n,), jnp.int32)
+    else:
+        batch["targets"] = SDS((n, _GNN_DOUT[cfg.model]), jnp.float32)
+    if cfg.model == "meshgraphnet":
+        batch["edge_feat"] = SDS((e, 4), jnp.float32)
+    if cfg.model in ("equiformer_v2", "mace"):
+        batch["positions"] = SDS((n, 3), jnp.float32)
+    return batch
+
+
+def _gnn_cell(cfg: GNNConfig, shape: ShapeSpec, mesh) -> Cell:
+    from repro.models.gnn import api
+
+    plan = MeshPlan.from_mesh(mesh)
+    flat = (
+        (plan.pod_axis, plan.data_axis, plan.model_axis)
+        if plan.pod_axis
+        else (plan.data_axis, plan.model_axis)
+    )
+    batch = _gnn_batch_struct(cfg, shape)
+    d_feat = batch["node_feat"].shape[1]
+    params = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg, d_feat)
+    )
+    opt_cfg = opt.OptimizerConfig()
+    opt_state = jax.eval_shape(lambda p: opt.init_opt_state(p, opt_cfg), params)
+    pspecs = jax.tree.map(lambda _: P(), params)
+    ospecs = jax.tree.map(lambda _: P(), opt_state)
+    bspec = {
+        k: P(flat, *([None] * (len(v.shape) - 1))) for k, v in batch.items()
+    }
+    step = trainer.make_train_step(cfg, opt_cfg, n_micro=1)
+    return Cell(
+        cfg.arch_id,
+        shape,
+        step,
+        (params, opt_state, batch),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspec)),
+        (_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# RecSys cells
+# ---------------------------------------------------------------------- #
+
+
+def _recsys_batch_struct(cfg: RecSysConfig, batch: int):
+    return {
+        "sparse_ids": SDS((batch, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        "sparse_mask": SDS((batch, cfg.n_sparse, cfg.multi_hot), jnp.float32),
+        "dense_feat": SDS((batch, cfg.n_dense), jnp.float32),
+        "labels": SDS((batch,), jnp.int32),
+    }
+
+
+def _recsys_param_specs(params, cfg: RecSysConfig, plan: MeshPlan):
+    specs = jax.tree.map(lambda _: P(), params)
+    specs["tables"] = P(None, plan.model_axis, None)
+    specs["w1_tables"] = P(None, plan.model_axis, None)
+    return specs
+
+
+def _recsys_cell(cfg: RecSysConfig, shape: ShapeSpec, mesh) -> Cell:
+    from repro.models.recsys import deepfm
+
+    plan = MeshPlan.from_mesh(mesh)
+    params = jax.eval_shape(lambda: deepfm.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = _recsys_param_specs(params, cfg, plan)
+
+    if shape.kind == "retrieval":
+        n_cand = shape.dim("n_candidates")
+        batch = _recsys_batch_struct(cfg, 1)
+        batch["candidate_ids"] = SDS((_pad(n_cand),), jnp.int32)
+        bspec = {k: P() for k in batch}
+        flat = (
+            (plan.pod_axis, plan.data_axis, plan.model_axis)
+            if plan.pod_axis
+            else (plan.data_axis, plan.model_axis)
+        )
+        bspec["candidate_ids"] = P(flat)
+        fn = lambda p, b: deepfm.retrieval_scores(p, b, cfg)
+        return Cell(
+            cfg.arch_id,
+            shape,
+            fn,
+            (params, batch),
+            (_ns(mesh, pspecs), _ns(mesh, bspec)),
+            NamedSharding(mesh, P(flat)),
+        )
+
+    b = shape.dim("batch")
+    batch = _recsys_batch_struct(cfg, b)
+    bspec = {
+        k: P(plan.batch, *([None] * (len(v.shape) - 1)))
+        for k, v in batch.items()
+    }
+    if shape.kind == "train":
+        opt_cfg = opt.OptimizerConfig()
+        opt_state = jax.eval_shape(
+            lambda p: opt.init_opt_state(p, opt_cfg), params
+        )
+        ospecs = opt.opt_state_specs(
+        pspecs, opt_cfg, params=params,
+        data_size=plan.data_size, model_size=plan.model_size,
+    )
+        step = trainer.make_train_step(cfg, opt_cfg, n_micro=1)
+        return Cell(
+            cfg.arch_id,
+            shape,
+            step,
+            (params, opt_state, batch),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspec)),
+            (_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+            donate_argnums=(0, 1),
+        )
+    fn = lambda p, bb: deepfm.forward(p, bb, cfg)
+    return Cell(
+        cfg.arch_id,
+        shape,
+        fn,
+        (params, batch),
+        (_ns(mesh, pspecs), _ns(mesh, bspec)),
+        NamedSharding(mesh, P(plan.batch)),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# CFPQ cells (the paper's workload at datacenter scale)
+# ---------------------------------------------------------------------- #
+
+
+def cfpq_grammar_tables():
+    from repro.core.grammar import query1_grammar
+    from repro.core.matrices import ProductionTables
+
+    g = query1_grammar().to_cnf()
+    return g, ProductionTables.from_grammar(g)
+
+
+def _cfpq_cell(cfg: CFPQConfig, shape: ShapeSpec, mesh, engine=None) -> Cell:
+    from repro.core import closure
+
+    plan = MeshPlan.from_mesh(mesh)
+    g, tables = cfpq_grammar_tables()
+    n = shape.dim("n_nodes")
+    row = (plan.pod_axis, plan.data_axis) if plan.pod_axis else plan.data_axis
+    eng = engine or cfg.engine
+    if eng == "opt":
+        # packed-state engine (beyond-paper): per-iteration step on uint32
+        # words — one-sided packed exchange + int8 MXU contraction.
+        Tp = SDS((g.n_nonterms, n, n // 32), jnp.uint32)
+        tspec = P(None, row, plan.model_axis)
+        fn = partial(closure.opt_step, tables=tables, n=n, plan=plan)
+        return Cell(
+            cfg.arch_id,
+            shape,
+            lambda t: fn(t),
+            (Tp,),
+            (_ns(mesh, tspec),),
+            NamedSharding(mesh, tspec),
+            donate_argnums=(0,),
+            note="engine=opt (per-iteration step on packed state)",
+        )
+    T = SDS((g.n_nonterms, n, n), jnp.bool_)
+    tspec = P(None, row, plan.model_axis)
+    fn_map = {
+        "dense": closure.dense_closure,
+        "frontier": closure.frontier_closure,
+    }
+    fn = partial(fn_map[eng], tables=tables)
+    return Cell(
+        cfg.arch_id,
+        shape,
+        lambda t: fn(t),
+        (T,),
+        (_ns(mesh, tspec),),
+        NamedSharding(mesh, tspec),
+        donate_argnums=(0,),
+        note=f"engine={eng}",
+    )
+
+
+# ---------------------------------------------------------------------- #
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, **kw) -> Cell:
+    cell = _build_cell(arch_id, shape_name, mesh, **kw)
+    cell.mesh = mesh
+    return cell
+
+
+def _build_cell(arch_id: str, shape_name: str, mesh, **kw) -> Cell:
+    cfg = registry.get_config(arch_id)
+    shape = next(s for s in registry.get_shapes(arch_id) if s.name == shape_name)
+    if isinstance(cfg, TransformerConfig):
+        if shape.kind == "train":
+            return _lm_train_cell(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(cfg, shape, mesh)
+        if shape.kind == "decode":
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                raise ValueError(
+                    "long_500k inapplicable: pure full-attention arch"
+                )
+            return _lm_decode_cell(cfg, shape, mesh)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(cfg, shape, mesh)
+    if isinstance(cfg, RecSysConfig):
+        return _recsys_cell(cfg, shape, mesh)
+    if isinstance(cfg, CFPQConfig):
+        return _cfpq_cell(cfg, shape, mesh, **kw)
+    raise KeyError((arch_id, shape_name))
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with cell.mesh:
+        return jitted.lower(*cell.args)

@@ -1,0 +1,63 @@
+"""Unified GNN interface used by the trainer / dry-run.
+
+Batch layout (flat node/edge tables, fixed shapes — batched small graphs are
+flattened with graph offsets, sampled subgraphs are padded by the sampler):
+
+    node_feat (N, d_feat) f32      positions (N, 3) f32 [equivariant archs]
+    edge_src/edge_dst (E,) int32   edge_feat (E, d_edge) f32 [meshgraphnet]
+    node_mask (N,) f32             edge_mask (E,) f32
+    labels (N,) int32 [gcn]        targets (N, d_out) f32 [regression archs]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from .equiformer_v2 import eqv2_forward, eqv2_init
+from .mace import mace_forward, mace_init
+from .simple import gcn_forward, gcn_init, mgn_forward, mgn_init
+
+D_EDGE = 4  # meshgraphnet edge features: rel-pos (3) + length (1)
+D_OUT = {"gcn": None, "meshgraphnet": 3, "equiformer_v2": 1, "mace": 1}
+
+
+def needs_positions(cfg: GNNConfig) -> bool:
+    return cfg.model in ("equiformer_v2", "mace")
+
+
+def init_params(key, cfg: GNNConfig, d_feat: int):
+    if cfg.model == "gcn":
+        return gcn_init(key, cfg, d_feat)
+    if cfg.model == "meshgraphnet":
+        return mgn_init(key, cfg, d_feat, D_EDGE, D_OUT["meshgraphnet"])
+    if cfg.model == "equiformer_v2":
+        return eqv2_init(key, cfg, d_feat, D_OUT["equiformer_v2"])
+    if cfg.model == "mace":
+        return mace_init(key, cfg, d_feat, D_OUT["mace"])
+    raise ValueError(cfg.model)
+
+
+def forward(params, batch, cfg: GNNConfig):
+    fn = {
+        "gcn": gcn_forward,
+        "meshgraphnet": mgn_forward,
+        "equiformer_v2": eqv2_forward,
+        "mace": mace_forward,
+    }[cfg.model]
+    return fn(params, batch, cfg)
+
+
+def loss_fn(params, batch, cfg: GNNConfig, plan=None):
+    out = forward(params, batch, cfg)
+    mask = batch["node_mask"]
+    if cfg.model == "gcn":
+        logp = jax.nn.log_softmax(out, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        metrics = {"nll": loss}
+    else:
+        err = ((out - batch["targets"]) ** 2).mean(axis=-1)
+        loss = (err * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        metrics = {"mse": loss}
+    return loss, metrics

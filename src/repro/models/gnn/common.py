@@ -1,0 +1,141 @@
+"""GNN substrate: segment aggregation, radial bases, neighbor sampling.
+
+JAX has no CSR SpMM — message passing is implemented as gather (by edge
+source) -> edge compute -> ``jax.ops.segment_sum`` scatter (by edge dest).
+This IS the system's sparse kernel layer (kernel_taxonomy §GNN); on TPU the
+gathers/scatters lower to dynamic-gather + scatter-add HLOs which XLA
+vectorizes over the edge axis, and the dense per-edge math hits the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_agg(
+    data: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    kind: str = "sum",
+) -> jnp.ndarray:
+    if kind == "sum":
+        return jax.ops.segment_sum(data, segment_ids, num_segments)
+    if kind == "mean":
+        s = jax.ops.segment_sum(data, segment_ids, num_segments)
+        cnt = jax.ops.segment_sum(
+            jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments
+        )
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if kind == "max":
+        return jax.ops.segment_max(data, segment_ids, num_segments)
+    raise ValueError(kind)
+
+
+def segment_softmax(
+    scores: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """Softmax over edges grouped by destination (attention over neighbors)."""
+    mx = jax.ops.segment_max(scores, segment_ids, num_segments)
+    ex = jnp.exp(scores - mx[segment_ids])
+    den = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(den[segment_ids], 1e-20)
+
+
+def gaussian_rbf(r: jnp.ndarray, n_rbf: int, r_cut: float = 5.0) -> jnp.ndarray:
+    """(E,) -> (E, n_rbf) gaussian radial basis with cosine cutoff."""
+    mu = jnp.linspace(0.0, r_cut, n_rbf)
+    gamma = (n_rbf / r_cut) ** 2
+    basis = jnp.exp(-gamma * (r[:, None] - mu[None, :]) ** 2)
+    envelope = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / r_cut, 0, 1)) + 1.0)
+    return basis * envelope[:, None]
+
+
+# ---------------------------------------------------------------------- #
+# Neighbor sampling (minibatch_lg): host-side CSR fanout sampler.
+# ---------------------------------------------------------------------- #
+
+
+class CSRGraph:
+    """Host-side CSR adjacency for sampling."""
+
+    def __init__(self, n_nodes: int, src: np.ndarray, dst: np.ndarray):
+        order = np.argsort(dst, kind="stable")
+        self.n_nodes = n_nodes
+        self.indices = src[order].astype(np.int32)  # in-neighbors per node
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(self.indptr, dst + 1, 1)
+        self.indptr = np.cumsum(self.indptr)
+
+    @classmethod
+    def random(cls, n_nodes: int, n_edges: int, seed: int = 0) -> "CSRGraph":
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n_nodes, n_edges, dtype=np.int64)
+        dst = rng.integers(0, n_nodes, n_edges, dtype=np.int64)
+        return cls(n_nodes, src, dst)
+
+
+def sampled_sizes(batch_nodes: int, fanouts: tuple[int, ...]) -> tuple[int, int]:
+    """(max_nodes, max_edges) of the fixed-shape sampled subgraph."""
+    n, e, frontier = batch_nodes, 0, batch_nodes
+    for f in fanouts:
+        e += frontier * f
+        frontier = frontier * f
+        n += frontier
+    return n, e
+
+
+def sample_subgraph(
+    g: CSRGraph,
+    seeds: np.ndarray,
+    fanouts: tuple[int, ...],
+    seed: int = 0,
+):
+    """Layer-wise uniform fanout sampling (GraphSAGE style).
+
+    Returns fixed-shape arrays (padded): local edge list (src, dst) over a
+    node table whose first ``len(seeds)`` entries are the seeds, plus the
+    global node ids and a validity mask.
+    """
+    rng = np.random.default_rng(seed)
+    max_nodes, max_edges = sampled_sizes(len(seeds), fanouts)
+    nodes = list(seeds)
+    local = {int(v): i for i, v in enumerate(seeds)}
+    e_src, e_dst = [], []
+    frontier = list(seeds)
+    for f in fanouts:
+        nxt = []
+        for v in frontier:
+            lo, hi = g.indptr[v], g.indptr[v + 1]
+            if hi == lo:
+                continue
+            picks = g.indices[
+                rng.integers(lo, hi, size=min(f, hi - lo))
+            ]
+            for u in picks:
+                u = int(u)
+                if u not in local:
+                    local[u] = len(nodes)
+                    nodes.append(u)
+                    nxt.append(u)
+                e_src.append(local[u])
+                e_dst.append(local[int(v)])
+        frontier = nxt
+    n, e = len(nodes), len(e_src)
+    node_ids = np.zeros(max_nodes, np.int32)
+    node_ids[:n] = nodes
+    node_mask = np.zeros(max_nodes, np.float32)
+    node_mask[:n] = 1.0
+    src = np.full(max_edges, max_nodes - 1, np.int32)
+    dst = np.full(max_edges, max_nodes - 1, np.int32)
+    src[:e] = e_src
+    dst[:e] = e_dst
+    edge_mask = np.zeros(max_edges, np.float32)
+    edge_mask[:e] = 1.0
+    return {
+        "node_ids": node_ids,
+        "node_mask": node_mask,
+        "edge_src": src,
+        "edge_dst": dst,
+        "edge_mask": edge_mask,
+    }

@@ -1,0 +1,153 @@
+"""Equiformer-v2 [arXiv:2306.12059]: equivariant graph attention with eSCN
+SO(2) convolutions.
+
+Core idea (faithfully adapted): per edge, rotate the source node's irrep
+features into a frame where the edge direction is +z.  In that frame an
+SO(3)-equivariant convolution reduces to per-|m| complex-linear mixing of
+the (+m, -m) coefficient pairs across l (the eSCN trick: O(L^6) tensor
+product -> O(L^3) dense mixing, all MXU-mappable matmuls).  Coefficients
+with |m| > m_max are truncated (the paper's m_max).  Messages are combined
+with multi-head attention whose scores come from invariant (l=0) channels,
+rotated back, and aggregated by destination.
+
+Documented simplification vs the released model: per-edge radial networks
+modulate each |m| block with a learned scalar gate (instead of generating
+the full SO(2) weight matrices per edge); separable S^2 activation is
+replaced by sigmoid gating of l>0 blocks by scalar channels.  Equivariance
+is exact either way and is enforced by tests/test_gnn.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.common import dense_init, mlp_apply, mlp_params, split_keys
+from .common import gaussian_rbf, segment_softmax
+from .so3 import lm_index, n_coeffs, rotation_to_z, wigner_stack
+
+
+def _m_rows(l_max: int, m: int) -> tuple[list[int], list[int]]:
+    """(+m rows, -m rows) flat lm indices for l >= |m|."""
+    plus = [lm_index(l, m) for l in range(abs(m), l_max + 1)]
+    minus = [lm_index(l, -m) for l in range(abs(m), l_max + 1)]
+    return plus, minus
+
+
+def eqv2_init(key, cfg: GNNConfig, d_feat: int, d_out: int = 1):
+    C, L, M = cfg.d_hidden, cfg.l_max, cfg.m_max
+    ks = split_keys(key, 3 + 6 * cfg.n_layers)
+    params = {
+        "embed": dense_init(ks[0], (d_feat, C)),
+        "readout": mlp_params(ks[1], (C, C, d_out)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        kk = split_keys(ks[2 + i], 8)
+        n0 = L + 1
+        layer = {
+            "w_m0": dense_init(kk[0], (n0 * C, n0 * C)),
+            "w_re": [
+                dense_init(kk[1], ((L + 1 - m) * C, (L + 1 - m) * C))
+                for m in range(1, M + 1)
+            ],
+            "w_im": [
+                dense_init(kk[2], ((L + 1 - m) * C, (L + 1 - m) * C))
+                for m in range(1, M + 1)
+            ],
+            "radial_gate": mlp_params(kk[3], (cfg.n_rbf, C, M + 1)),
+            "attn": mlp_params(kk[4], (2 * C + cfg.n_rbf, C, cfg.n_heads)),
+            "scalar_mlp": mlp_params(kk[5], (C, C, C)),
+            "l_gate": dense_init(kk[6], (C, L * C)),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def _rotate(Ds, X, l_max: int, transpose: bool = False):
+    """Apply block-diagonal Wigner to (E, K, C) irrep features."""
+    outs = []
+    for l in range(l_max + 1):
+        blk = X[:, l * l : (l + 1) ** 2, :]  # (E, 2l+1, C)
+        D = Ds[l]
+        if transpose:
+            D = jnp.swapaxes(D, -1, -2)
+        outs.append(jnp.einsum("eij,ejc->eic", D, blk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def eqv2_forward(params, batch, cfg: GNNConfig):
+    C, L, M, H = cfg.d_hidden, cfg.l_max, cfg.m_max, cfg.n_heads
+    K = n_coeffs(L)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pos = batch["positions"]
+    n = pos.shape[0]
+    em = batch.get("edge_mask")
+
+    vec = pos[dst] - pos[src]
+    r = jnp.linalg.norm(vec, axis=-1)
+    rbf = gaussian_rbf(r, cfg.n_rbf)
+    # degenerate (zero-length) edges have no frame: mask them out entirely
+    deg_ok = (r > 1e-6).astype(jnp.float32)
+    em = deg_ok if em is None else em * deg_ok
+    R = rotation_to_z(vec)
+    Ds = wigner_stack(R, L)
+
+    X = jnp.zeros((n, K, C))
+    X = X.at[:, 0, :].set(batch["node_feat"] @ params["embed"])
+
+    for layer in params["layers"]:
+        Xs = X[src]  # (E, K, C)
+        Xr = _rotate(Ds, Xs, L)  # edge frame
+        gates = jax.nn.sigmoid(mlp_apply(layer["radial_gate"], rbf))  # (E, M+1)
+
+        Y = jnp.zeros_like(Xr)
+        # m = 0: plain linear across (l, C)
+        rows0, _ = _m_rows(L, 0)
+        x0 = Xr[:, rows0, :].reshape(-1, len(rows0) * C)
+        y0 = (x0 @ layer["w_m0"]) * gates[:, 0:1]
+        Y = Y.at[:, rows0, :].set(y0.reshape(-1, len(rows0), C))
+        # 1 <= m <= m_max: complex-linear mixing of (+m, -m) pairs
+        for m in range(1, M + 1):
+            rp, rn = _m_rows(L, m)
+            nl = len(rp)
+            xp = Xr[:, rp, :].reshape(-1, nl * C)
+            xn = Xr[:, rn, :].reshape(-1, nl * C)
+            w1, w2 = layer["w_re"][m - 1], layer["w_im"][m - 1]
+            yp = (xp @ w1 - xn @ w2) * gates[:, m : m + 1]
+            yn = (xp @ w2 + xn @ w1) * gates[:, m : m + 1]
+            Y = Y.at[:, rp, :].set(yp.reshape(-1, nl, C))
+            Y = Y.at[:, rn, :].set(yn.reshape(-1, nl, C))
+        # |m| > m_max truncated (stay zero)
+
+        msg = _rotate(Ds, Y, L, transpose=True)  # back to global frame
+
+        score_in = jnp.concatenate([X[dst][:, 0, :], msg[:, 0, :], rbf], -1)
+        score = mlp_apply(layer["attn"], score_in)  # (E, H)
+        if em is not None:
+            score = jnp.where(em[:, None] > 0, score, -1e30)
+        alpha = segment_softmax(score, dst, n)  # (E, H)
+        if em is not None:
+            alpha = alpha * em[:, None]
+        msg_h = msg.reshape(*msg.shape[:-1], H, C // H)
+        msg_h = msg_h * alpha[:, None, :, None]
+        agg = jax.ops.segment_sum(
+            msg_h.reshape(msg.shape), dst, n
+        )  # (N, K, C)
+        X = X + agg
+
+        # node-wise equivariant nonlinearity
+        s = X[:, 0, :]
+        s_new = s + mlp_apply(layer["scalar_mlp"], jax.nn.silu(s))
+        lg = jax.nn.sigmoid(s @ layer["l_gate"]).reshape(n, L, C)
+        X_hi = X[:, 1:, :]
+        scale = jnp.concatenate(
+            [
+                jnp.repeat(lg[:, l : l + 1, :], 2 * l + 3, axis=1)
+                for l in range(L)
+            ],
+            axis=1,
+        )
+        X = jnp.concatenate([s_new[:, None, :], X_hi * scale], axis=1)
+
+    return mlp_apply(params["readout"], X[:, 0, :])  # (N, d_out) invariant

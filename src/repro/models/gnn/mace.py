@@ -1,0 +1,144 @@
+"""MACE [arXiv:2206.07697]: higher-order equivariant message passing (ACE).
+
+Per layer: (1) the atomic density  A_i,lm,c = sum_j R_lc(r_ij) Y_lm(r_ij^)
+s_c(h_j)  (radial MLP x spherical harmonics x channel-mixed scalars of the
+neighbor), then (2) the *product basis* — symmetric tensor powers of A up to
+``correlation_order`` contracted back to target irreps L with real Gaunt
+coupling tensors (so3.real_gaunt), per channel:
+
+    B1_L = A_L
+    B2_L = sum_{l1,l2}         G(l1,l2;L)       A_l1 (x) A_l2
+    B3_L = sum_{l1,l2,l12,l3}  G(l1,l2;l12), G(l12,l3;L)  A^3
+
+(3) messages are per-channel linear combinations over coupling paths, and
+scalar node states update from the invariant (L=0) component; readout is a
+per-node invariant MLP.  Intermediate couplings are truncated at l_max=2
+(the config's l_max) — the standard MACE truncation.
+
+The coupling-path contractions are einsums over (2l+1)-sized axes batched
+over nodes and channels — MXU-friendly; the coupling tensors are constant
+(precomputed exactly by so3.real_gaunt, verified by tests/test_so3.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.common import dense_init, mlp_apply, mlp_params, split_keys
+from .common import gaussian_rbf
+from .so3 import n_coeffs, real_gaunt, real_sph_harm
+
+
+def _order2_paths(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l1, l_max + 1):
+            for L in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                if np.abs(real_gaunt(l1, l2, L)).max() > 0:
+                    out.append((l1, l2, L))
+    return out
+
+
+def _order3_paths(l_max: int):
+    out = []
+    for l1, l2, l12 in _order2_paths(l_max):
+        for l3 in range(l_max + 1):
+            for L in range(abs(l12 - l3), min(l12 + l3, l_max) + 1):
+                if np.abs(real_gaunt(l12, l3, L)).max() > 0:
+                    out.append((l1, l2, l12, l3, L))
+    return out
+
+
+def mace_init(key, cfg: GNNConfig, d_feat: int, d_out: int = 1):
+    C, L = cfg.d_hidden, cfg.l_max
+    n2, n3 = len(_order2_paths(L)), len(_order3_paths(L))
+    ks = split_keys(key, 2 + 5 * cfg.n_layers)
+    params = {
+        "embed": dense_init(ks[0], (d_feat, C)),
+        "readout": mlp_params(ks[1], (C, C, d_out)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        kk = split_keys(ks[2 + i], 6)
+        params["layers"].append(
+            {
+                "radial": mlp_params(kk[0], (cfg.n_rbf, C, (L + 1) * C)),
+                "w_src": dense_init(kk[1], (C, C)),
+                "w_b1": dense_init(kk[2], (L + 1, C, C)),
+                "w_b2": dense_init(kk[3], (n2, C)) if n2 else None,
+                "w_b3": dense_init(kk[4], (n3, C)) if n3 else None,
+                "w_update": dense_init(kk[5], (C, C)),
+            }
+        )
+    return params
+
+
+def _slice_l(X, l):
+    return X[:, l * l : (l + 1) ** 2, :]
+
+
+def mace_forward(params, batch, cfg: GNNConfig):
+    C, L = cfg.d_hidden, cfg.l_max
+    K = n_coeffs(L)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pos = batch["positions"]
+    n = pos.shape[0]
+    em = batch.get("edge_mask")
+
+    vec = pos[dst] - pos[src]
+    r = jnp.linalg.norm(vec, axis=-1)
+    dirs = vec / jnp.maximum(r, 1e-9)[:, None]
+    rbf = gaussian_rbf(r, cfg.n_rbf)
+    Y = real_sph_harm(dirs, L)  # (E, K)
+    # degenerate (zero-length / self-loop) edges have no direction: drop them
+    # (Y at the zero vector is an arbitrary constant and breaks equivariance)
+    Y = Y * (r > 1e-6)[:, None]
+
+    h = batch["node_feat"] @ params["embed"]  # (N, C) scalars
+    p2, p3 = _order2_paths(L), _order3_paths(L)
+
+    for layer in params["layers"]:
+        # (1) atomic density A
+        Rl = mlp_apply(layer["radial"], rbf).reshape(-1, L + 1, C)  # (E,L+1,C)
+        s = (h @ layer["w_src"])[src]  # (E, C)
+        phi = []
+        for l in range(L + 1):
+            yl = Y[:, l * l : (l + 1) ** 2]  # (E, 2l+1)
+            phi.append(yl[:, :, None] * (Rl[:, l, :] * s)[:, None, :])
+        phi = jnp.concatenate(phi, axis=1)  # (E, K, C)
+        if em is not None:
+            phi = phi * em[:, None, None]
+        A = jax.ops.segment_sum(phi, dst, n)  # (N, K, C)
+
+        # (2) product basis -> (3) message, accumulated per target L
+        msg = jnp.zeros_like(A)
+        for l in range(L + 1):
+            m1 = jnp.einsum("nmc,cd->nmd", _slice_l(A, l), layer["w_b1"][l])
+            msg = msg.at[:, l * l : (l + 1) ** 2, :].add(m1)
+        if cfg.correlation_order >= 2 and p2:
+            for pi, (l1, l2, Lt) in enumerate(p2):
+                G = jnp.asarray(real_gaunt(l1, l2, Lt), jnp.float32)
+                b2 = jnp.einsum(
+                    "abM,nac,nbc->nMc", G, _slice_l(A, l1), _slice_l(A, l2)
+                )
+                msg = msg.at[:, Lt * Lt : (Lt + 1) ** 2, :].add(
+                    b2 * layer["w_b2"][pi][None, None, :]
+                )
+        if cfg.correlation_order >= 3 and p3:
+            for pi, (l1, l2, l12, l3, Lt) in enumerate(p3):
+                G12 = jnp.asarray(real_gaunt(l1, l2, l12), jnp.float32)
+                G3 = jnp.asarray(real_gaunt(l12, l3, Lt), jnp.float32)
+                t = jnp.einsum(
+                    "abM,nac,nbc->nMc", G12, _slice_l(A, l1), _slice_l(A, l2)
+                )
+                b3 = jnp.einsum("abM,nac,nbc->nMc", G3, t, _slice_l(A, l3))
+                msg = msg.at[:, Lt * Lt : (Lt + 1) ** 2, :].add(
+                    b3 * layer["w_b3"][pi][None, None, :]
+                )
+
+        # scalar update from the invariant component
+        h = h + jax.nn.silu(msg[:, 0, :] @ layer["w_update"])
+
+    return mlp_apply(params["readout"], h)  # (N, d_out), E(3)-invariant

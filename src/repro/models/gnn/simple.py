@@ -1,0 +1,78 @@
+"""GCN [arXiv:1609.02907] and MeshGraphNet [arXiv:2010.03409]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.common import dense_init, mlp_apply, mlp_params, split_keys
+from .common import segment_agg
+
+
+# ------------------------------- GCN ---------------------------------- #
+
+
+def gcn_init(key, cfg: GNNConfig, d_feat: int):
+    ks = split_keys(key, cfg.n_layers)
+    sizes = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    return {
+        "w": [dense_init(k, (a, b)) for k, a, b in zip(ks, sizes, sizes[1:])]
+    }
+
+
+def gcn_forward(params, batch, cfg: GNNConfig):
+    """Symmetric-normalized GCN: h' = D^-1/2 (A+I) D^-1/2 h W."""
+    h = batch["node_feat"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = h.shape[0]
+    em = batch.get("edge_mask")
+    ones = jnp.ones_like(src, jnp.float32) if em is None else em
+    deg = jax.ops.segment_sum(ones, dst, n) + 1.0  # +1 self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    coef = (inv_sqrt[src] * inv_sqrt[dst]) * ones
+    for i, w in enumerate(params["w"]):
+        h = h @ w
+        msg = h[src] * coef[:, None]
+        h = jax.ops.segment_sum(msg, dst, n) + h * (1.0 / deg)[:, None]
+        if i + 1 < len(params["w"]):
+            h = jax.nn.relu(h)
+    return h  # (N, n_classes) logits
+
+
+# --------------------------- MeshGraphNet ----------------------------- #
+
+
+def mgn_init(key, cfg: GNNConfig, d_feat: int, d_edge: int, d_out: int = 3):
+    d = cfg.d_hidden
+    ks = split_keys(key, 3 + 2 * cfg.n_layers)
+    hidden = tuple([d] * cfg.mlp_layers)
+    p = {
+        "enc_node": mlp_params(ks[0], (d_feat, *hidden, d)),
+        "enc_edge": mlp_params(ks[1], (d_edge, *hidden, d)),
+        "dec": mlp_params(ks[2], (d, *hidden, d_out)),
+        "blocks": [
+            {
+                "edge_mlp": mlp_params(ks[3 + 2 * i], (3 * d, *hidden, d)),
+                "node_mlp": mlp_params(ks[4 + 2 * i], (2 * d, *hidden, d)),
+            }
+            for i in range(cfg.n_layers)
+        ],
+    }
+    return p
+
+
+def mgn_forward(params, batch, cfg: GNNConfig):
+    """Encode-process(n_layers)-decode with residual edge/node MLPs."""
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = batch["node_feat"].shape[0]
+    h = mlp_apply(params["enc_node"], batch["node_feat"])
+    e = mlp_apply(params["enc_edge"], batch["edge_feat"])
+    em = batch.get("edge_mask")
+    for blk in params["blocks"]:
+        e_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e = e + mlp_apply(blk["edge_mlp"], e_in)
+        if em is not None:
+            e = e * em[:, None]
+        agg = segment_agg(e, dst, n, cfg.aggregator)
+        h = h + mlp_apply(blk["node_mlp"], jnp.concatenate([h, agg], -1))
+    return mlp_apply(params["dec"], h)  # (N, d_out)

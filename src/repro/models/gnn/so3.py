@@ -1,0 +1,273 @@
+"""SO(3) machinery for the equivariant GNNs (Equiformer-v2, MACE).
+
+Everything here is exact (no fitted approximations):
+
+  * real spherical harmonics Y_lm up to l_max via associated-Legendre
+    recurrences (jnp, static loops);
+  * real Wigner rotation matrices D^l(R) via the Ivanic-Ruedenberg
+    recursion (J. Phys. Chem. 1996) — pure real arithmetic, built l by l
+    from D^1 = permuted R, vectorized over edges;
+  * real Gaunt coefficients (the coupling tensors for MACE's product basis)
+    from Wigner 3j symbols (Racah formula, exact factorial arithmetic in
+    numpy) conjugated into the real basis.
+
+The identity Y(R d) = D^l(R) Y(d) and the product expansion
+Y_l1 ⊗ Y_l2 = Σ_L G · Y_L are enforced by tests/test_so3.py.
+
+TPU note: Wigner assembly is ~455 small gather/mul expressions for l<=6 —
+XLA fuses them into a few VPU loops over the edge axis; the irrep tensor
+contractions downstream are einsums that map onto the MXU.  This follows the
+eSCN observation that rotating to an edge-aligned frame reduces the O(L^6)
+tensor product to O(L^3) per-m mixing (DESIGN.md §Hardware-adaptation).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def lm_index(l: int, m: int) -> int:
+    return l * l + l + m
+
+
+# ---------------------------------------------------------------------- #
+# Real spherical harmonics
+# ---------------------------------------------------------------------- #
+
+
+def real_sph_harm(dirs: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Y: (..., (l_max+1)^2) for unit vectors dirs (..., 3).
+
+    Convention: Condon-Shortley-free real SH with full normalization
+    (integrates to 1 over the sphere); ordering m = -l..l per l.
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    ct = jnp.clip(z, -1.0, 1.0)
+    st = jnp.sqrt(jnp.maximum(1.0 - ct * ct, 0.0))
+    phi = jnp.arctan2(y, x)
+
+    # associated Legendre P_l^m(ct) without Condon-Shortley, m >= 0
+    P: dict[tuple[int, int], jnp.ndarray] = {(0, 0): jnp.ones_like(ct)}
+    for m in range(1, l_max + 1):
+        P[(m, m)] = (2 * m - 1) * st * P[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        P[(m + 1, m)] = (2 * m + 1) * ct * P[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            P[(l, m)] = (
+                (2 * l - 1) * ct * P[(l - 1, m)] - (l + m - 1) * P[(l - 2, m)]
+            ) / (l - m)
+
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = math.sqrt(
+                (2 * l + 1)
+                / (4 * math.pi)
+                * math.factorial(l - am)
+                / math.factorial(l + am)
+            )
+            if m == 0:
+                out.append(norm * P[(l, 0)])
+            elif m > 0:
+                out.append(math.sqrt(2) * norm * P[(l, m)] * jnp.cos(m * phi))
+            else:
+                out.append(math.sqrt(2) * norm * P[(l, am)] * jnp.sin(am * phi))
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------- #
+# Wigner D for real SH: Ivanic-Ruedenberg recursion
+# ---------------------------------------------------------------------- #
+
+
+def _d1_from_rotation(R: jnp.ndarray) -> jnp.ndarray:
+    """D^1 in the real-SH (y, z, x) ordering: D1[i, j] = R[s(i), s(j)]."""
+    s = [1, 2, 0]
+    rows = [[R[..., s[i], s[j]] for j in range(3)] for i in range(3)]
+    return jnp.stack([jnp.stack(r, axis=-1) for r in rows], axis=-2)
+
+
+def wigner_stack(R: jnp.ndarray, l_max: int) -> list[jnp.ndarray]:
+    """[D^0, D^1, ..., D^l_max], each (..., 2l+1, 2l+1), vectorized over
+    leading dims of the rotation matrices R (..., 3, 3)."""
+    batch = R.shape[:-2]
+    Ds = [jnp.ones((*batch, 1, 1), R.dtype)]
+    if l_max == 0:
+        return Ds
+    D1 = _d1_from_rotation(R)
+    Ds.append(D1)
+
+    for l in range(2, l_max + 1):
+        Dp = Ds[l - 1]  # (..., 2l-1, 2l-1)
+
+        def P(i, a, b):
+            # a in [-(l-1), l-1] indexes Dp rows; b in [-l, l] output col
+            ri = D1[..., i + 1, :]
+            if b == l:
+                return (
+                    ri[..., 2] * Dp[..., a + l - 1, 2 * l - 2]
+                    - ri[..., 0] * Dp[..., a + l - 1, 0]
+                )
+            if b == -l:
+                return (
+                    ri[..., 2] * Dp[..., a + l - 1, 0]
+                    + ri[..., 0] * Dp[..., a + l - 1, 2 * l - 2]
+                )
+            return ri[..., 1] * Dp[..., a + l - 1, b + l - 1]
+
+        rows = []
+        for m in range(-l, l + 1):
+            cols = []
+            for n in range(-l, l + 1):
+                denom = (
+                    (l + n) * (l - n) if abs(n) < l else (2 * l) * (2 * l - 1)
+                )
+                am = abs(m)
+                u = math.sqrt((l + m) * (l - m) / denom)
+                v = (
+                    0.5
+                    * math.sqrt(
+                        (1 + (m == 0)) * (l + am - 1) * (l + am) / denom
+                    )
+                    * (1 - 2 * (m == 0))
+                )
+                w = -0.5 * math.sqrt((l - am - 1) * (l - am) / denom) * (
+                    1 - (m == 0)
+                )
+                term = 0.0
+                if u != 0.0:
+                    term = term + u * P(0, m, n)
+                if v != 0.0:
+                    if m == 0:
+                        V = P(1, 1, n) + P(-1, -1, n)
+                    elif m > 0:
+                        V = P(1, m - 1, n) * math.sqrt(1 + (m == 1)) - P(
+                            -1, -m + 1, n
+                        ) * (1 - (m == 1))
+                    else:
+                        V = P(1, m + 1, n) * (1 - (m == -1)) + P(
+                            -1, -m - 1, n
+                        ) * math.sqrt(1 + (m == -1))
+                    term = term + v * V
+                if w != 0.0:
+                    if m > 0:
+                        W = P(1, m + 1, n) + P(-1, -m - 1, n)
+                    else:  # m < 0 (w == 0 when m == 0)
+                        W = P(1, m - 1, n) - P(-1, -m + 1, n)
+                    term = term + w * W
+                cols.append(term)
+            rows.append(jnp.stack(cols, axis=-1))
+        Ds.append(jnp.stack(rows, axis=-2))
+    return Ds
+
+
+def block_diag_wigner(R: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Full (..., K, K) block-diagonal D over all l <= l_max (K=(l_max+1)^2)."""
+    Ds = wigner_stack(R, l_max)
+    K = n_coeffs(l_max)
+    batch = R.shape[:-2]
+    out = jnp.zeros((*batch, K, K), R.dtype)
+    for l, D in enumerate(Ds):
+        i = l * l
+        out = out.at[..., i : i + 2 * l + 1, i : i + 2 * l + 1].set(D)
+    return out
+
+
+def rotation_to_z(dirs: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """R (..., 3, 3) with R @ d = e_z for unit d (the eSCN edge frame)."""
+    d = dirs / jnp.maximum(
+        jnp.linalg.norm(dirs, axis=-1, keepdims=True), eps
+    )
+    ref = jnp.where(
+        (jnp.abs(d[..., 2:3]) < 0.98),
+        jnp.broadcast_to(jnp.array([0.0, 0.0, 1.0]), d.shape),
+        jnp.broadcast_to(jnp.array([1.0, 0.0, 0.0]), d.shape),
+    )
+    b1 = jnp.cross(ref, d)
+    b1 = b1 / jnp.maximum(jnp.linalg.norm(b1, axis=-1, keepdims=True), eps)
+    b2 = jnp.cross(d, b1)
+    return jnp.stack([b1, b2, d], axis=-2)
+
+
+# ---------------------------------------------------------------------- #
+# Real Gaunt coefficients (the coupling tensors for MACE's product basis)
+# ---------------------------------------------------------------------- #
+#
+# G_{m1 m2 M} = ∫ Y_{l1 m1} Y_{l2 m2} Y_{L M} dΩ.  Since the product
+# Y_{l1 m1}·Y_{l2 m2} lies exactly in span{Y_{L M} : L <= l1+l2}, projecting
+# sampled products onto the basis by least squares recovers G exactly (up to
+# fp rounding) in OUR basis convention — no complex-basis conversion and no
+# convention drift between the SH evaluator and the coupling tensors.
+
+
+def _real_sph_harm_np(dirs: np.ndarray, l_max: int) -> np.ndarray:
+    """Pure-numpy mirror of real_sph_harm — real_gaunt must stay concrete
+    even when reached from inside jax.eval_shape / tracing (jnp constants
+    become tracers there)."""
+    x, y, z = dirs[:, 0], dirs[:, 1], dirs[:, 2]
+    ct = np.clip(z, -1.0, 1.0)
+    st = np.sqrt(np.maximum(1.0 - ct * ct, 0.0))
+    phi = np.arctan2(y, x)
+    P = {(0, 0): np.ones_like(ct)}
+    for m in range(1, l_max + 1):
+        P[(m, m)] = (2 * m - 1) * st * P[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        P[(m + 1, m)] = (2 * m + 1) * ct * P[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            P[(l, m)] = (
+                (2 * l - 1) * ct * P[(l - 1, m)] - (l + m - 1) * P[(l - 2, m)]
+            ) / (l - m)
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = math.sqrt(
+                (2 * l + 1)
+                / (4 * math.pi)
+                * math.factorial(l - am)
+                / math.factorial(l + am)
+            )
+            if m == 0:
+                out.append(norm * P[(l, 0)])
+            elif m > 0:
+                out.append(math.sqrt(2) * norm * P[(l, m)] * np.cos(m * phi))
+            else:
+                out.append(math.sqrt(2) * norm * P[(l, am)] * np.sin(am * phi))
+    return np.stack(out, axis=-1)
+
+
+@lru_cache(maxsize=None)
+def real_gaunt(l1: int, l2: int, l3: int) -> np.ndarray:
+    """G (2l1+1, 2l2+1, 2l3+1) in the real_sph_harm basis."""
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1))
+    l_big = l1 + l2
+    K = n_coeffs(l_big)
+    rng = np.random.default_rng(20240213)
+    v = rng.normal(size=(4 * K + 16, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    Y = _real_sph_harm_np(v, l_big).astype(np.float64)
+    Y1 = Y[:, l1 * l1 : (l1 + 1) ** 2]
+    Y2 = Y[:, l2 * l2 : (l2 + 1) ** 2]
+    prod = Y1[:, :, None] * Y2[:, None, :]  # (S, 2l1+1, 2l2+1)
+    flat = prod.reshape(prod.shape[0], -1)
+    # Solve against the FULL basis up to l1+l2 (the expansion is exact
+    # there), then slice out the l3 rows.
+    coef, *_ = np.linalg.lstsq(Y, flat, rcond=None)  # (K, m1*m2)
+    sl = coef[l3 * l3 : (l3 + 1) ** 2]
+    G = sl.T.reshape(2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1)
+    # Y is evaluated in f32; true nonzero Gaunts are O(0.1), so 1e-6 cleanly
+    # separates numerical noise from structure (selection rules exact).
+    G = G.astype(np.float64)
+    G[np.abs(G) < 1e-6] = 0.0
+    return G

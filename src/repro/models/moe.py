@@ -1,0 +1,121 @@
+"""Mixture-of-experts layer: top-k routing, grouped sort-based dispatch,
+capacity drop.
+
+TPU mapping: dispatch uses the *grouped* sort formulation — tokens are
+reshaped to (n_groups, tokens_per_group) with groups aligned to the data
+mesh axis, and the argsort/rank computation runs along the trailing axis,
+i.e. row-locally.  A single global argsort would force GSPMD to replicate
+the (T*k, d) dispatch buffers on every device (at 1M tokens x 4096 that is
+17 GB/device); the grouped form keeps every intermediate sharded, and the
+token->expert exchange lowers to the canonical expert-parallel all-to-all
+between the data-sharded groups and the model-sharded experts.  This is the
+GShard/Switch "group" scheme realized with sort-based ranking instead of the
+quadratic one-hot dispatch einsum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from .common import dense_init, split_keys
+
+
+def moe_params(key, d_model: int, m: MoEConfig, dtype=jnp.float32):
+    ks = split_keys(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d_model, m.n_experts)),
+        "we_gate": dense_init(ks[1], (m.n_experts, d_model, m.d_ff_expert), dtype=dtype),
+        "we_up": dense_init(ks[2], (m.n_experts, d_model, m.d_ff_expert), dtype=dtype),
+        "we_down": dense_init(ks[3], (m.n_experts, m.d_ff_expert, d_model), dtype=dtype),
+    }
+    if m.d_ff_shared:
+        p["ws_gate"] = dense_init(ks[4], (d_model, m.d_ff_shared), dtype=dtype)
+        p["ws_up"] = dense_init(ks[5], (d_model, m.d_ff_shared), dtype=dtype)
+        p["ws_down"] = dense_init(ks[6], (m.d_ff_shared, d_model), dtype=dtype)
+    return p
+
+
+def _wsc(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_apply(p, x: jnp.ndarray, m: MoEConfig, plan=None):
+    """x: (T, d) -> (y: (T, d), aux_loss: scalar)."""
+    from jax.sharding import PartitionSpec as P
+
+    T, d = x.shape
+    E, k = m.n_experts, m.top_k
+    G = 1
+    g_axis = None
+    ex_axis = None
+    if plan is not None:
+        G = plan.batch_size_divisor
+        if T % G != 0 or (T // G) * k < E:
+            G = 1
+        g_axis = plan.batch
+        ex_axis = plan.tp_dim(E)
+    Tg = T // G
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.zeros((E,)).at[expert_idx.reshape(-1)].add(1.0) / (T * k)
+    router_frac = probs.mean(axis=0)
+    aux = E * jnp.sum(density * router_frac)
+
+    # ---- grouped dispatch: every op below is per-group (row-local) ----
+    cap = int(Tg * k / E * m.capacity_factor)
+    cap = max(4, -(-cap // 4) * 4)
+    xg = x.reshape(G, Tg, d)
+    xg = _wsc(xg, P(g_axis, None, None)) if plan else xg
+    flat_e = expert_idx.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=-1)  # row-local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left")
+    )(sorted_e)  # (G, E)
+    pos_in_e = jnp.arange(Tg * k)[None] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=-1
+    )
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap - 1)
+    token_of = order // k  # (G, Tg*k) row-local token index
+
+    gathered = jnp.take_along_axis(xg, token_of[..., None], axis=1)
+    gathered = gathered * keep[..., None].astype(x.dtype)
+    buf = jax.vmap(lambda idx, val: jnp.zeros((E * cap, d), x.dtype).at[idx].add(val))(
+        dest, gathered
+    )
+    xe = buf.reshape(G, E, cap, d)
+    if plan:
+        xe = _wsc(xe, P(g_axis, ex_axis, None, None))
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", xe, p["we_gate"].astype(x.dtype))
+    ) * jnp.einsum("gecd,edf->gecf", xe, p["we_up"].astype(x.dtype))
+    if plan:
+        h = _wsc(h, P(g_axis, ex_axis, None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(x.dtype))
+    if plan:
+        ye = _wsc(ye, P(g_axis, ex_axis, None, None))
+    ye = ye.reshape(G, E * cap, d)
+
+    w = jnp.take_along_axis(gate.reshape(G, Tg * k), order, axis=-1) * keep
+    contrib = jnp.take_along_axis(ye, dest[..., None], axis=1)
+    contrib = contrib * w[..., None].astype(x.dtype)
+    y = jax.vmap(lambda idx, val: jnp.zeros((Tg, d), x.dtype).at[idx].add(val))(
+        token_of, contrib
+    )
+    y = y.reshape(T, d)
+
+    if m.d_ff_shared:
+        hs = jax.nn.silu(x @ p["ws_gate"].astype(x.dtype)) * (
+            x @ p["ws_up"].astype(x.dtype)
+        )
+        y = y + hs @ p["ws_down"].astype(x.dtype)
+    return y, aux

@@ -1,0 +1,99 @@
+"""DeepFM [arXiv:1703.04247]: FM interaction branch + deep MLP branch over
+shared sparse embeddings.
+
+JAX has no native EmbeddingBag or CSR sparse — the embedding-bag lookup is
+built from ``jnp.take`` + ``jax.ops.segment_sum`` (kernel_taxonomy §RecSys):
+each of the 39 sparse fields does a multi-hot ragged lookup (fixed width
+``multi_hot`` with a validity mask) reduced by sum.  Tables are row-sharded
+over the model axis (the classic recsys "model parallel" embedding layout);
+the lookup's gather over a vocab-sharded table lowers to an all-to-all-style
+collective under pjit.
+
+FM second-order term uses the O(k) identity
+  sum_{i<j} <v_i, v_j> = 0.5 * ((sum v_i)^2 - sum v_i^2).
+
+``retrieval_cand`` scores one user against 10^6 candidates as one batched
+matvec over candidate embeddings (no loop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.models.common import dense_init, mlp_apply, mlp_params, split_keys
+
+
+def init_params(key, cfg: RecSysConfig):
+    ks = split_keys(key, 5)
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    return {
+        # one stacked table: (n_fields, vocab, dim) — row-sharded over model
+        "tables": dense_init(
+            ks[0], (cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim), scale=0.01
+        ),
+        # first-order weights per field value + dense linear
+        "w1_tables": dense_init(ks[1], (cfg.n_sparse, cfg.vocab_per_field, 1), scale=0.01),
+        "w1_dense": dense_init(ks[2], (cfg.n_dense, 1)),
+        "mlp": mlp_params(ks[3], (d_in, *cfg.mlp, 1)),
+        "bias": jnp.zeros(()),
+    }
+
+
+def embedding_bag(table, ids, mask):
+    """table (V, D); ids (B, M) int32; mask (B, M) -> (B, D) sum-bag."""
+    emb = jnp.take(table, ids, axis=0)  # (B, M, D)
+    return (emb * mask[..., None]).sum(axis=1)
+
+
+def field_embeddings(params, batch, cfg: RecSysConfig):
+    """-> (B, n_sparse, D) bagged embedding per field."""
+    ids = batch["sparse_ids"]  # (B, F, M)
+    mask = batch["sparse_mask"]  # (B, F, M)
+    embs = []
+    for f in range(cfg.n_sparse):
+        embs.append(embedding_bag(params["tables"][f], ids[:, f], mask[:, f]))
+    return jnp.stack(embs, axis=1)
+
+
+def forward(params, batch, cfg: RecSysConfig):
+    """-> (B,) logits."""
+    v = field_embeddings(params, batch, cfg)  # (B, F, D)
+    dense = batch["dense_feat"]  # (B, n_dense)
+
+    # first order
+    ids, mask = batch["sparse_ids"], batch["sparse_mask"]
+    lin = params["bias"] + (dense @ params["w1_dense"])[:, 0]
+    for f in range(cfg.n_sparse):
+        lin = lin + embedding_bag(params["w1_tables"][f], ids[:, f], mask[:, f])[:, 0]
+
+    # FM second order: 0.5 * ((sum_f v)^2 - sum_f v^2), summed over dim
+    s = v.sum(axis=1)
+    fm = 0.5 * ((s * s).sum(-1) - (v * v).sum(axis=(1, 2)))
+
+    # deep branch
+    deep_in = jnp.concatenate([v.reshape(v.shape[0], -1), dense], axis=-1)
+    deep = mlp_apply(params["mlp"], deep_in)[:, 0]
+    return lin + fm + deep
+
+
+def loss_fn(params, batch, cfg: RecSysConfig, plan=None):
+    logits = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"bce": loss}
+
+
+def retrieval_scores(params, batch, cfg: RecSysConfig):
+    """Score one query's user-side representation against N candidate items
+    via a single batched dot product.
+
+    batch: user sparse ids/mask + dense feats (batch=1) and
+    ``candidate_ids`` (N,) into field 0's table (the item table).
+    """
+    v = field_embeddings(params, batch, cfg)  # (1, F, D)
+    user = v.sum(axis=1)[0]  # (D,) pooled user embedding
+    cands = jnp.take(params["tables"][0], batch["candidate_ids"], axis=0)
+    return cands @ user  # (N,)

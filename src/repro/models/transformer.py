@@ -1,0 +1,415 @@
+"""Decoder-only LM covering all five assigned transformer archs.
+
+Layer pattern is expressed in *blocks* of ``e = moe.every`` layers (e = 1 for
+dense and per-layer-MoE archs, e = 2 for llama4's interleaved MoE): the train
+path is a ``lax.scan`` over blocks with per-block remat, so the HLO stays
+small at 94 layers and activation memory is one block deep; the serve path is
+unrolled per layer (decode steps are latency-critical and heterogeneous in
+cache shape — local layers keep rolling window caches).
+
+Params are stacked over (n_blocks, e, ...) so block weights feed the scan
+directly.  ``param_specs`` mirrors the param tree with PartitionSpecs that
+implement TP (+ FSDP over data) per shard/plans.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TransformerConfig
+from repro.shard.plans import MeshPlan
+from .attention import banded_attention, chunked_attention, decode_attention
+from .common import dense_init, rms_norm, rope, split_keys
+from .moe import moe_apply, moe_params
+
+
+def _block_counts(cfg: TransformerConfig) -> tuple[int, int]:
+    """Blocks of e layers; e = lcm(MoE interleave period, local:global
+    attention period) so the layer pattern inside a block is STATIC — the
+    local layers can then take the banded-attention path (real FLOPs
+    savings) instead of masking the full S x S scores."""
+    import math
+
+    e = cfg.moe.every if cfg.moe else 1
+    if cfg.window and cfg.local_global_ratio:
+        e = math.lcm(e, cfg.local_global_ratio + 1)
+    assert cfg.n_layers % e == 0, (cfg.n_layers, e)
+    return cfg.n_layers // e, e
+
+
+def _act_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------- #
+# Parameters
+# ---------------------------------------------------------------------- #
+
+
+def _attn_layer_params(key, cfg: TransformerConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "norm": jnp.zeros((d,)),
+        "wq": dense_init(ks[0], (d, H * hd)).reshape(d, H, hd),
+        "wk": dense_init(ks[1], (d, KV * hd)).reshape(d, KV, hd),
+        "wv": dense_init(ks[2], (d, KV * hd)).reshape(d, KV, hd),
+        "wo": dense_init(ks[3], (H * hd, d)).reshape(H, hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,))
+        p["k_norm"] = jnp.zeros((hd,))
+    return p
+
+
+def _dense_ffn_params(key, cfg: TransformerConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "norm": jnp.zeros((d,)),
+        "gate": dense_init(ks[0], (d, f)),
+        "up": dense_init(ks[1], (d, f)),
+        "down": dense_init(ks[2], (f, d)),
+    }
+
+
+def init_params(key, cfg: TransformerConfig):
+    n_blocks, e = _block_counts(cfg)
+    k_embed, k_unembed, k_blocks = jax.random.split(key, 3)
+
+    def one_block(key):
+        ks = split_keys(key, e + e)
+        attn = [_attn_layer_params(ks[i], cfg) for i in range(e)]
+        block = {"attn": jax.tree.map(lambda *xs: jnp.stack(xs), *attn)}
+        if e > 1:
+            dense = [_dense_ffn_params(ks[e + i], cfg) for i in range(e - 1)]
+            block["dense_ffn"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dense)
+        if cfg.moe:
+            block["moe"] = moe_params(ks[-1], cfg.d_model, cfg.moe)
+            block["moe_norm"] = jnp.zeros((cfg.d_model,))
+        else:
+            block["last_ffn"] = _dense_ffn_params(ks[-1], cfg)
+        return block
+
+    blocks = [one_block(k) for k in split_keys(k_blocks, n_blocks)]
+    return {
+        "embed": dense_init(k_embed, (cfg.vocab, cfg.d_model), scale=1.0),
+        "unembed": dense_init(k_unembed, (cfg.d_model, cfg.vocab)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+    }
+
+
+def param_specs(cfg: TransformerConfig, plan: MeshPlan, decode: bool = False):
+    """PartitionSpec pytree mirroring init_params' output."""
+    d, H, KV, hd, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    mode = plan.attn_mode(H, hd, decode)
+    fs, tp = plan.fsdp_dim, plan.tp_dim
+    n_blocks, e = _block_counts(cfg)
+    L2 = (None, None)  # attn leaves are always stacked (n_blocks, e, ...)
+
+    def head_spec(nh):  # (..., D, nh, hd)
+        if mode == "head" and nh % plan.model_size == 0:
+            return P(*L2, fs(d), plan.model_axis, None)
+        if mode == "hd":
+            return P(*L2, fs(d), None, plan.model_axis)
+        return P(*L2, fs(d), None, None)  # head_uneven / replicate
+
+    def wo_spec():
+        if mode == "head" and H % plan.model_size == 0:
+            return P(*L2, plan.model_axis, None, fs(d))
+        if mode == "hd":
+            return P(*L2, None, plan.model_axis, fs(d))
+        return P(*L2, None, None, fs(d))
+
+    attn = {
+        "norm": P(*L2, fs(d)),
+        "wq": head_spec(H),
+        "wk": head_spec(KV),
+        "wv": head_spec(KV),
+        "wo": wo_spec(),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(*L2, None)
+        attn["k_norm"] = P(*L2, None)
+
+    def dense_ffn(stack_dims):
+        return {
+            "norm": P(*stack_dims, fs(d)),
+            "gate": P(*stack_dims, fs(d), tp(f)),
+            "up": P(*stack_dims, fs(d), tp(f)),
+            "down": P(*stack_dims, tp(f), fs(d)),
+        }
+
+    blocks = {"attn": attn}
+    if e > 1:
+        blocks["dense_ffn"] = dense_ffn((None, None))
+    if cfg.moe:
+        m = cfg.moe
+        ex = plan.tp_dim(m.n_experts)
+        moe = {
+            "router": P(None, fs(d), None),
+            "we_gate": P(None, ex, fs(d), None),
+            "we_up": P(None, ex, fs(d), None),
+            "we_down": P(None, ex, None, fs(d)),
+        }
+        if m.d_ff_shared:
+            moe["ws_gate"] = P(None, fs(d), tp(m.d_ff_shared))
+            moe["ws_up"] = P(None, fs(d), tp(m.d_ff_shared))
+            moe["ws_down"] = P(None, tp(m.d_ff_shared), fs(d))
+        blocks["moe"] = moe
+        blocks["moe_norm"] = P(None, fs(d))
+    else:
+        blocks["last_ffn"] = dense_ffn((None,))
+    return {
+        "embed": P(tp(cfg.vocab), fs(d)),
+        "unembed": P(fs(d), tp(cfg.vocab)),
+        "final_norm": P(fs(d)),
+        "blocks": blocks,
+    }
+
+
+# ---------------------------------------------------------------------- #
+# Forward (train / prefill)
+# ---------------------------------------------------------------------- #
+
+
+def _attn_sublayer(p, x, cfg: TransformerConfig, is_local, positions=None, plan=None):
+    dt = x.dtype
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+    if plan is not None and plan.attn_mode(cfg.n_heads, cfg.hd, False) == "seq":
+        # context parallelism: q keeps the sequence shard, k/v gather to
+        # full-sequence replicas (small: S x KV x hd), scores stay local
+        q = jax.lax.with_sharding_constraint(
+            q, P(plan.batch, plan.model_axis, None, None)
+        )
+        k = jax.lax.with_sharding_constraint(k, P(plan.batch, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P(plan.batch, None, None, None))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = (
+        positions
+        if positions is not None
+        else jnp.arange(x.shape[1])[None, :]
+    )
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    if (
+        cfg.window
+        and is_local
+        and x.shape[1] % cfg.window == 0
+        and x.shape[1] >= 8 * cfg.window
+    ):
+        # static local layer at long S: banded attention computes only the
+        # diagonal band — 2*W*S score work instead of S^2/2.  Gated on
+        # S >= 8W: measured at S=4W the two are FLOP-identical and banded
+        # pays extra relayout copies (EXPERIMENTS §Perf).
+        out = banded_attention(q, k, v, cfg.window)
+    elif cfg.window and is_local:
+        out = chunked_attention(
+            q, k, v, causal=True, window=cfg.window, chunk=cfg.attn_chunk
+        )
+    else:
+        out = chunked_attention(q, k, v, causal=True, window=0, chunk=cfg.attn_chunk)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _dense_ffn(p, x, cfg):
+    dt = x.dtype
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    act = jax.nn.silu(h @ p["gate"].astype(dt)) * (h @ p["up"].astype(dt))
+    return x + act @ p["down"].astype(dt)
+
+
+def _moe_sublayer(p, norm_scale, x, cfg, plan=None):
+    B, S, d = x.shape
+    h = rms_norm(x, norm_scale, cfg.norm_eps)
+    y, aux = moe_apply(p, h.reshape(B * S, d), cfg.moe, plan)
+    return x + y.reshape(B, S, d), aux
+
+
+def apply_block(bp, x, cfg: TransformerConfig, plan=None):
+    """One block of ``e`` layers: attn (+dense FFN) x (e-1), then attn +
+    (MoE | dense) FFN.  Shared by the train scan and the roofline
+    component cells.  The local/global pattern repeats per block, so the
+    flag is a static python bool per in-block position."""
+    _, e = _block_counts(cfg)
+    aux = jnp.float32(0.0)
+    for i in range(e):
+        p_i = jax.tree.map(lambda a: a[i], bp["attn"])
+        x = _attn_sublayer(p_i, x, cfg, cfg.layer_is_local(i), plan=plan)
+        if i < e - 1:
+            d_i = jax.tree.map(lambda a: a[i], bp["dense_ffn"])
+            x = _dense_ffn(d_i, x, cfg)
+    if cfg.moe:
+        x, aux = _moe_sublayer(bp["moe"], bp["moe_norm"], x, cfg, plan)
+    else:
+        x = _dense_ffn(bp["last_ffn"], x, cfg)
+    if plan is not None:
+        x = jax.lax.with_sharding_constraint(x, _x_spec(cfg, plan))
+    return x, aux
+
+
+def _x_spec(cfg: TransformerConfig, plan: MeshPlan):
+    """Hidden-state layout: batch over data; sequence over model when the
+    arch runs sequence-parallel attention (full SP — FFN/MoE stay token-
+    sharded too)."""
+    if plan.attn_mode(cfg.n_heads, cfg.hd, False) == "seq":
+        return P(plan.batch, plan.model_axis, None)
+    return plan.p_batch(None, None)
+
+
+def lm_head_loss(params, x, targets, cfg: TransformerConfig):
+    """final norm + unembed + token xent (the non-block part of the loss)."""
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def forward(
+    params,
+    tokens,
+    cfg: TransformerConfig,
+    plan: MeshPlan | None = None,
+    last_only: bool = False,
+):
+    """tokens (B, S) int32 -> logits (B, S, vocab) f32 (or (B, 1, vocab)
+    when ``last_only`` — the prefill path must never materialize the full
+    (B, S, vocab) logits tensor)."""
+    n_blocks, e = _block_counts(cfg)
+    dt = _act_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens] * jnp.asarray(
+        cfg.d_model**0.5, dt
+    )
+    if plan is not None:
+        x = jax.lax.with_sharding_constraint(x, _x_spec(cfg, plan))
+
+    def block_fn(x, bp):
+        x, a = apply_block(bp, x, cfg, plan)
+        return x, a  # aux flows through ys: keeps the scan carry pure-bf16
+
+    block_fn = jax.checkpoint(
+        block_fn, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    x, auxs = jax.lax.scan(block_fn, x, params["blocks"])
+    aux = auxs.sum()
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(dt),
+        preferred_element_type=jnp.float32,
+    )
+    return logits, aux / n_blocks
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig, plan=None):
+    """Serving prefill: full-sequence forward, last-token logits (B, vocab)."""
+    logits, _ = forward(params, tokens, cfg, plan, last_only=True)
+    return logits[:, 0]
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, plan: MeshPlan | None = None):
+    logits, aux = forward(params, batch["tokens"], cfg, plan)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------- #
+# Serving (decode with KV cache)
+# ---------------------------------------------------------------------- #
+
+
+def cache_len(cfg: TransformerConfig, layer: int, max_seq: int) -> int:
+    if cfg.window and cfg.layer_is_local(layer):
+        return min(cfg.window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or _act_dtype(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return [
+        {
+            "k": jnp.zeros((batch, cache_len(cfg, i, max_seq), KV, hd), dt),
+            "v": jnp.zeros((batch, cache_len(cfg, i, max_seq), KV, hd), dt),
+        }
+        for i in range(cfg.n_layers)
+    ]
+
+
+def cache_specs(cfg: TransformerConfig, plan: MeshPlan, seq_shard: bool):
+    """Batch over data; head_dim over model; optionally seq over data
+    (long-context, batch=1)."""
+    if seq_shard:
+        spec = P(None, plan.data_axis, None, plan.model_axis)
+    else:
+        spec = P(plan.batch, None, None, plan.model_axis)
+    return [{"k": spec, "v": spec} for _ in range(cfg.n_layers)]
+
+
+def serve_step(params, cache, tokens, pos, cfg: TransformerConfig):
+    """One decode step.  tokens (B, 1); pos () int32 — current position.
+
+    Returns (logits (B, vocab), new_cache).  Layers are unrolled; block
+    params are statically indexed out of the stacked tree.
+    """
+    n_blocks, e = _block_counts(cfg)
+    dt = _act_dtype(cfg)
+    x = params["embed"].astype(dt)[tokens] * jnp.asarray(cfg.d_model**0.5, dt)
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    new_cache = []
+    for layer in range(cfg.n_layers):
+        b, i = divmod(layer, e)
+        bp = jax.tree.map(lambda a: a[b], params["blocks"])
+        p = jax.tree.map(lambda a: a[i], bp["attn"])
+        h = rms_norm(x, p["norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        c = cache[layer]
+        slot = pos % c["k"].shape[1]  # rolling for window caches
+        ck = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot, axis=1)
+        new_cache.append({"k": ck, "v": cv})
+        is_local = cfg.window and cfg.layer_is_local(layer)
+        out = decode_attention(
+            q, ck, cv, pos, window=cfg.window if is_local else 0
+        )
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        # FFN sublayer for this layer
+        if i < e - 1:
+            d_i = jax.tree.map(lambda a: a[i], bp["dense_ffn"])
+            x = _dense_ffn(d_i, x, cfg)
+        elif cfg.moe:
+            x, _ = _moe_sublayer(bp["moe"], bp["moe_norm"], x, cfg)
+        else:
+            x = _dense_ffn(bp["last_ffn"], x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(dt),
+        preferred_element_type=jnp.float32,
+    )
+    return logits[:, 0], new_cache

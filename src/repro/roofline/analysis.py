@@ -1,0 +1,191 @@
+"""Three-term roofline per (arch x shape x mesh) from the dry-run artifacts.
+
+    compute term    = per-device HLO FLOPs / 197 TFLOP/s (bf16 MXU peak)
+    memory term     = per-device HLO bytes accessed / 819 GB/s HBM
+    collective term = per-device moved collective bytes / 50 GB/s ICI
+
+All inputs are post-SPMD per-device quantities.  For scanned programs
+(LM train/prefill) the terms are composed from component cells times their
+trip counts (launch/components.py); loop-free programs (decode, GNN,
+recsys) come straight from the dry-run JSON; CFPQ is reported per fixpoint
+iteration.
+
+MODEL_FLOPS (the "useful work" yardstick):
+    LM train:    6 * N_active * tokens        (fwd 2x + bwd 4x)
+    LM prefill:  2 * N_active * tokens (+ attention term)
+    LM decode:   2 * N_active * batch  (+ 2*KV attention reads)
+    GNN/recsys:  analytic per model (edges * d ops, table lookups)
+    CFPQ:        2 * |P| * n^3 * density-free upper bound per iteration
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e-class target)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+EXP_DIR = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "../../../experiments")
+)
+
+
+def _load(path_glob: str) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(path_glob)):
+        with open(p) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def model_flops(arch: str, shape_name: str, n_dev: int) -> float:
+    """Analytic useful-FLOPs per device per step (6ND convention)."""
+    from repro.configs import registry
+    from repro.configs.base import (
+        CFPQConfig,
+        GNNConfig,
+        RecSysConfig,
+        TransformerConfig,
+    )
+
+    cfg = registry.get_config(arch)
+    shape = next(s for s in registry.get_shapes(arch) if s.name == shape_name)
+    d = dict(shape.dims)
+    if isinstance(cfg, TransformerConfig):
+        n_active = cfg.active_param_count()
+        if shape.kind == "train":
+            tokens = d["seq_len"] * d["global_batch"]
+            total = 6 * n_active * tokens
+        elif shape.kind == "prefill":
+            tokens = d["seq_len"] * d["global_batch"]
+            attn = 2 * 2 * tokens * d["seq_len"] / 2 * cfg.n_heads * cfg.hd
+            total = 2 * n_active * tokens + attn
+        else:  # decode
+            toks = d["global_batch"]
+            attn = 2 * 2 * toks * d["seq_len"] * cfg.n_heads * cfg.hd
+            total = 2 * n_active * toks + attn
+        return total / n_dev
+    if isinstance(cfg, GNNConfig):
+        e, dh = d.get("n_edges", 0), cfg.d_hidden
+        if shape.kind == "graph_sampled":
+            from repro.models.gnn.common import sampled_sizes
+
+            _, e = sampled_sizes(d["batch_nodes"], (d["fanout1"], d["fanout2"]))
+        if shape.kind == "graph_batched":
+            e = d["n_edges"] * d["batch"]
+        k = {"gcn": 2, "meshgraphnet": 6 * cfg.mlp_layers}.get(cfg.model, 0)
+        if cfg.model == "equiformer_v2":
+            K = (cfg.l_max + 1) ** 2
+            k = 6 * K  # rotate, mix, rotate-back per channel
+        if cfg.model == "mace":
+            k = 8 * (cfg.l_max + 1) ** 2
+        total = 2 * 3 * e * dh * dh * max(1, cfg.n_layers) * max(k, 2) / 2
+        return total / n_dev
+    if isinstance(cfg, RecSysConfig):
+        b = d.get("batch", 1)
+        mlp = sum(
+            a * bb for a, bb in zip(
+                (cfg.n_sparse * cfg.embed_dim + cfg.n_dense, *cfg.mlp),
+                (*cfg.mlp, 1),
+            )
+        )
+        total = 2 * b * mlp * (3 if shape.kind == "train" else 1)
+        if shape.kind == "retrieval":
+            total = 2 * d["n_candidates"] * cfg.embed_dim
+        return total / n_dev
+    if isinstance(cfg, CFPQConfig):
+        from repro.launch.specs import cfpq_grammar_tables
+
+        g, tables = cfpq_grammar_tables()
+        n = d["n_nodes"]
+        return 2 * tables.n_prods * n**3 / n_dev  # per iteration (dense bound)
+    raise TypeError(cfg)
+
+
+def roofline_row(arch: str, shape: str, mesh: str) -> dict | None:
+    """Compose one table row from dryrun + component JSONs."""
+    dr = _load(f"{EXP_DIR}/dryrun/{arch}__{shape}__{mesh}.json")
+    if not dr:
+        return None
+    dr = dr[0]
+    n_dev = dr["n_devices"]
+    comps = _load(f"{EXP_DIR}/components/{arch}__{shape}__{mesh}__*.json")
+    if comps:  # composed (scanned program)
+        flops = sum(c["flops"] * c["multiplier"] for c in comps)
+        byts = sum(c["bytes_accessed"] * c["multiplier"] for c in comps)
+        coll = sum(
+            c["collectives"]["_total"]["moved_bytes"] * c["multiplier"]
+            for c in comps
+        )
+        method = "composed(%d)" % len(comps)
+    else:
+        flops = dr["cost"]["flops"]
+        byts = dr["cost"]["bytes_accessed"]
+        coll = dr["collectives"]["_total"]["moved_bytes"]
+        method = "direct"
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(arch, shape, n_dev)
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "method": method,
+        "flops_dev": flops,
+        "bytes_dev": byts,
+        "coll_bytes_dev": coll,
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (
+            mf / PEAK_FLOPS / max(t_c, t_m, t_x) if max(t_c, t_m, t_x) else 0.0
+        ),
+        "hbm_bytes_dev": dr["memory"]["temp_bytes"],
+        "args_bytes_dev": dr["memory"]["argument_bytes"],
+    }
+
+
+def full_table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(f"{EXP_DIR}/dryrun/*__{mesh}.json")):
+        base = os.path.basename(path)[: -len(f"__{mesh}.json")]
+        arch, shape = base.split("__")[:2]
+        row = roofline_row(arch, shape, mesh)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (
+        f"{'arch':28s} {'shape':14s} {'t_comp':>9s} {'t_mem':>9s} "
+        f"{'t_coll':>9s} {'dom':>5s} {'useful':>7s} {'roofline%':>9s} "
+        f"{'HBM(GB)':>8s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:14s} "
+            f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+            f"{r['t_collective_s']:9.2e} {r['dominant'][:5]:>5s} "
+            f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:8.1f}% "
+            f"{(r['hbm_bytes_dev'] or 0)/1e9:8.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(format_table(full_table(mesh)))

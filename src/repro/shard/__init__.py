@@ -1,0 +1,1 @@
+from .plans import MeshPlan  # noqa: F401

@@ -1,0 +1,90 @@
+"""Sharding plans: how each family maps onto the production mesh.
+
+The production mesh is (data=16, model=16) per pod, with a leading pod axis
+for multi-pod (DESIGN.md).  Conventions:
+
+  * batch / tokens / edges  -> sharded over (pod, data): multi-pod runs are
+    pure data-parallel across pods (gradient all-reduce crosses the pod
+    axis), FSDP within a pod;
+  * tensor-parallel dims    -> sharded over ``model``;
+  * parameters additionally FSDP-shard a non-TP dim over ``data`` (ZeRO-3);
+    XLA inserts the all-gathers/reduce-scatters from the shardings.
+
+Attention TP mode is resolved per arch (DESIGN.md §Hardware-adaptation):
+  head-mode when n_heads divides by |model| (KV weights replicate when
+  n_kv_heads doesn't divide — standard GQA TP), else head_dim ("hd") mode,
+  which shards the contraction dimension of QK^T / PV (always legal since
+  every assigned arch has head_dim % 16 == 0).  Decode always uses hd-mode so
+  the KV cache shards even with few KV heads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    pod_axis: str | None  # None on single-pod meshes
+    data_axis: str
+    model_axis: str
+    pod_size: int
+    data_size: int
+    model_size: int
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshPlan":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        pod = "pod" if "pod" in sizes else None
+        return cls(
+            pod_axis=pod,
+            data_axis="data",
+            model_axis="model",
+            pod_size=sizes.get("pod", 1),
+            data_size=sizes["data"],
+            model_size=sizes["model"],
+        )
+
+    # -- spec helpers ------------------------------------------------- #
+    @property
+    def batch(self):
+        """Mesh axes a batch-like leading dim shards over."""
+        return (
+            (self.pod_axis, self.data_axis) if self.pod_axis else self.data_axis
+        )
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return self.pod_size * self.data_size
+
+    def p_batch(self, *rest):
+        return P(self.batch, *rest)
+
+    def fsdp_dim(self, size: int):
+        """FSDP shards a param dim over 'data' only when divisible."""
+        return self.data_axis if size % self.data_size == 0 else None
+
+    def tp_dim(self, size: int):
+        return self.model_axis if size % self.model_size == 0 else None
+
+    def attn_mode(self, n_heads: int, head_dim: int, decode: bool) -> str:
+        import os
+
+        mode = os.environ.get("REPRO_ATTN_FALLBACK", "seq")
+        force = os.environ.get("REPRO_ATTN_FORCE")
+        if force and not decode:
+            return force  # perf-experiment override (EXPERIMENTS.md §Perf)
+        if not decode and n_heads % self.model_size == 0:
+            return "head"
+        if not decode and mode == "seq":
+            # sequence-parallel attention for awkward head counts (40, 15):
+            # activations shard the SEQUENCE over model; K/V are all-gathered
+            # (tiny) so scores stay local.  Measured alternatives (§Perf):
+            # "hd" psums the (S, S) score tensor (catastrophic); uneven head
+            # sharding trips GSPMD involuntary replication at the GQA
+            # reshape.  Decode still uses hd (cache shards by head_dim).
+            return "seq"
+        if head_dim % self.model_size == 0:
+            return "hd"
+        return "replicate"

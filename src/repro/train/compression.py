@@ -1,0 +1,68 @@
+"""Gradient compression for cross-pod data parallelism (beyond-paper).
+
+At 512 chips the gradient all-reduce over the pod axis crosses the (slow)
+inter-pod links; int8 compression with error feedback cuts those bytes 4x
+vs f32 (2x vs bf16) at negligible quality cost (1-bit/8-bit SGD literature).
+
+Scheme (per tensor, inside shard_map over the DP axis):
+  1. v = grad + error_carry          (error feedback)
+  2. scale = pmax(max|v|) / 127      (shared scale -> exact decode)
+  3. q = round(v / scale) : int8     (the wire format)
+  4. g_hat = psum(q) * scale / n_dp
+  5. error_carry = v - q * scale     (local quantization residual)
+
+The psum is expressed over the int8 payload widened to int32 for exact
+accumulation — a production collective would move int8 on the wire with
+int32 accumulators, which is what the roofline's collective-bytes
+accounting assumes.
+
+Representation: per-device local grads are stacked on a leading axis sharded
+over the DP mesh axis — grads_stacked leaf (n_dp, ...), one slice per
+device.  ``reduce`` returns the reduced mean (replicated content, leading
+dim 1) and the per-device error carry (n_dp, ...).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def make_compressed_allreduce(mesh, axis: str = "data"):
+    n_dev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def kernel(g, e):
+        # local shapes: (1, ...) — one device's slice
+        v = g + e
+        scale = jax.lax.pmax(jnp.max(jnp.abs(v)), axis) / 127.0
+        scale = jnp.maximum(scale, 1e-20)
+        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        g_hat = total.astype(jnp.float32) * scale / n_dev
+        err = v - q.astype(jnp.float32) * scale
+        return g_hat, err
+
+    def one_leaf(g_stacked, e_stacked):
+        fn = shard_map(
+            kernel,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis)),
+            out_specs=(P(None), P(axis)),
+            check_rep=False,
+        )
+        g_hat, err = fn(g_stacked, e_stacked)
+        return g_hat[0], err  # drop the replicated leading dim
+
+    def reduce(grads_stacked, err_state):
+        flat_g, treedef = jax.tree.flatten(grads_stacked)
+        flat_e = jax.tree.leaves(err_state)
+        outs = [one_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        )
+
+    return reduce

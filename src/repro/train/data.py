@@ -1,0 +1,70 @@
+"""Stateless synthetic data pipelines, keyed by (arch, step).
+
+Every batch is a pure function of the global step — after a crash/restart
+the pipeline replays the exact sequence with zero persisted reader state
+(the checkpoint only needs the step counter).  Real deployments would swap
+in a deterministic-sharded file reader with the same contract.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import GNNConfig, RecSysConfig, TransformerConfig
+from repro.models.gnn import api as gnn_api
+
+
+def _rng(arch_id: str, step: int) -> np.random.Generator:
+    seed = (hash(arch_id) & 0xFFFF_FFFF) ^ (step * 0x9E3779B9 & 0xFFFF_FFFF)
+    return np.random.default_rng(seed)
+
+
+def lm_batch(cfg: TransformerConfig, batch: int, seq: int, step: int, n_micro: int = 1):
+    rng = _rng(cfg.arch_id, step)
+    toks = rng.integers(0, cfg.vocab, (batch, seq + 1), dtype=np.int64)
+    b = {
+        "tokens": toks[:, :-1].astype(np.int32),
+        "targets": toks[:, 1:].astype(np.int32),
+    }
+    if n_micro > 1:
+        assert batch % n_micro == 0
+        b = {
+            k: v.reshape(n_micro, batch // n_micro, seq) for k, v in b.items()
+        }
+    return b
+
+
+def gnn_batch(cfg: GNNConfig, n: int, e: int, d_feat: int, step: int):
+    rng = _rng(cfg.arch_id, step)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    rel = pos[dst] - pos[src]
+    d_out = gnn_api.D_OUT.get(cfg.model) or 1
+    return {
+        "node_feat": rng.normal(size=(n, d_feat)).astype(np.float32),
+        "positions": pos,
+        "edge_src": src,
+        "edge_dst": dst,
+        "edge_feat": np.concatenate(
+            [rel, np.linalg.norm(rel, axis=1, keepdims=True)], axis=1
+        ).astype(np.float32),
+        "node_mask": np.ones(n, np.float32),
+        "edge_mask": np.ones(e, np.float32),
+        "labels": rng.integers(0, cfg.n_classes, n).astype(np.int32),
+        "targets": rng.normal(size=(n, d_out)).astype(np.float32),
+    }
+
+
+def recsys_batch(cfg: RecSysConfig, batch: int, step: int):
+    rng = _rng(cfg.arch_id, step)
+    M = cfg.multi_hot
+    return {
+        "sparse_ids": rng.integers(
+            0, cfg.vocab_per_field, (batch, cfg.n_sparse, M)
+        ).astype(np.int32),
+        "sparse_mask": (rng.random((batch, cfg.n_sparse, M)) < 0.7).astype(
+            np.float32
+        ),
+        "dense_feat": rng.normal(size=(batch, cfg.n_dense)).astype(np.float32),
+        "labels": rng.integers(0, 2, batch).astype(np.int32),
+    }

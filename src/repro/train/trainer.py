@@ -1,0 +1,67 @@
+"""Generic train step: microbatched gradient accumulation around any family's
+loss, AdamW update, metrics.
+
+The microbatch loop is a ``lax.scan`` over a leading microbatch axis on the
+batch pytree — activation memory is one microbatch deep (the per-block remat
+inside the models bounds it further), while the gradient accumulator carries
+the full (sharded) param-sized tree in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, RecSysConfig, TransformerConfig
+from . import optimizer as opt
+
+
+def make_loss_fn(model_cfg, plan=None):
+    if isinstance(model_cfg, TransformerConfig):
+        from repro.models import transformer as tf
+
+        return lambda p, b: tf.loss_fn(p, b, model_cfg, plan)
+    if isinstance(model_cfg, GNNConfig):
+        from repro.models.gnn import api
+
+        return lambda p, b: api.loss_fn(p, b, model_cfg, plan)
+    if isinstance(model_cfg, RecSysConfig):
+        from repro.models.recsys import deepfm
+
+        return lambda p, b: deepfm.loss_fn(p, b, model_cfg, plan)
+    raise TypeError(type(model_cfg))
+
+
+def make_train_step(model_cfg, opt_cfg: opt.OptimizerConfig, n_micro: int = 1, plan=None):
+    loss_fn = make_loss_fn(model_cfg, plan)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def micro(acc, mb):
+                (l, _), g = grad_fn(params, mb)
+                return (
+                    jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), acc, g
+                    ),
+                    l,
+                )
+
+            acc, losses = jax.lax.scan(micro, acc0, batch)
+            grads = jax.tree.map(lambda a: a / n_micro, acc)
+            loss = losses.mean()
+            metrics = {}
+        params, opt_state, om = opt.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests must see ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); make sure nothing here touches XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

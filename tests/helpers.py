@@ -1,0 +1,65 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.grammar import CNFGrammar, Production
+from repro.core.graph import Graph
+
+
+def cyk_recognize(g: CNFGrammar, start: str, word: list[str]) -> bool:
+    """Classic CYK over a CNF grammar — used to verify extracted witness
+    paths really derive from the queried nonterminal."""
+    n = len(word)
+    if n == 0:
+        return start in g.nullable
+    N = g.n_nonterms
+    tab = np.zeros((n, n + 1, N), dtype=bool)  # [i, j) span
+    for i, x in enumerate(word):
+        for a in g.term_prods.get(x, ()):
+            tab[i, i + 1, a] = True
+    for span in range(2, n + 1):
+        for i in range(0, n - span + 1):
+            j = i + span
+            for a, b, c in g.binary_prods:
+                for k in range(i + 1, j):
+                    if tab[i, k, b] and tab[k, j, c]:
+                        tab[i, j, a] = True
+                        break
+    return bool(tab[0, n, g.index_of(start)])
+
+
+def random_cnf(rng: np.random.Generator, n_nt=3, n_t=2, n_bin=4, n_term=3):
+    """A random CNF grammar over terminals t0..; nonterminal A0 is start."""
+    prods = []
+    for _ in range(n_bin):
+        a, b, c = rng.integers(0, n_nt, size=3)
+        prods.append(Production(f"A{a}", (f"A{b}", f"A{c}")))
+    for _ in range(n_term):
+        a = rng.integers(0, n_nt)
+        t = rng.integers(0, n_t)
+        prods.append(Production(f"A{a}", (f"t{t}",)))
+    # every nonterminal referenced on a RHS must have a production; dropping
+    # a production can orphan others, so filter to a fixpoint
+    while True:
+        lhs = {p.lhs for p in prods}
+        kept = [
+            p
+            for p in prods
+            if all(s in lhs or s.startswith("t") for s in p.rhs)
+        ]
+        if len(kept) == len(prods):
+            break
+        prods = kept
+    if not prods:
+        prods = [Production("A0", ("t0",))]
+    return CNFGrammar.from_productions(prods)
+
+
+def random_graph(rng: np.random.Generator, n_nodes=6, n_edges=12, n_t=2):
+    edges = []
+    for _ in range(n_edges):
+        i, j = rng.integers(0, n_nodes, size=2)
+        t = rng.integers(0, n_t)
+        edges.append((int(i), f"t{t}", int(j)))
+    return Graph(n_nodes, edges)

@@ -1,0 +1,78 @@
+"""Property tests: every matrix engine == the Hellings worklist baseline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import hellings_cfpq
+from repro.core import closure
+from repro.core.graph import (
+    Graph,
+    ontology_graph,
+    paper_table_graph,
+    worst_case_graph,
+)
+from repro.core.grammar import Grammar, query1_grammar, query2_grammar
+from repro.core.matrices import (
+    ProductionTables,
+    init_matrix,
+    relations_from_matrix,
+)
+from helpers import random_cnf, random_graph
+
+
+def _run_all_engines(graph, g):
+    tables = ProductionTables.from_grammar(g)
+    T0 = init_matrix(graph, g)
+    dense = np.asarray(closure.dense_closure(T0, tables))
+    rel = relations_from_matrix(dense, g, graph.n_nodes)
+    for alt in (
+        closure.frontier_closure(T0, tables),
+        closure.bitpacked_closure(T0, tables, use_kernel=False),
+    ):
+        assert (np.asarray(alt) == dense).all()
+    return rel
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_graph_grammar_equivalence(seed):
+    rng = np.random.default_rng(seed)
+    g = random_cnf(rng)
+    graph = random_graph(
+        rng,
+        n_nodes=int(rng.integers(2, 9)),
+        n_edges=int(rng.integers(1, 16)),
+    )
+    rel = _run_all_engines(graph, g)
+    expect = hellings_cfpq(graph, g)
+    assert rel == expect
+
+
+@pytest.mark.parametrize("name", ["skos", "foaf", "people-pets"])
+@pytest.mark.parametrize("qgram", [query1_grammar, query2_grammar])
+def test_ontology_queries_match_baseline(name, qgram):
+    graph = paper_table_graph(name)
+    g = qgram().to_cnf()
+    rel = _run_all_engines(graph, g)
+    expect = hellings_cfpq(graph, g)
+    assert rel["S"] == expect["S"]
+    assert len(rel["S"]) > 0  # queries are non-trivial on these graphs
+
+
+def test_worst_case_graph():
+    """Two cycles + S -> a S b | a b: result size Theta(n^2) — stresses many
+    fixpoint iterations (long dependency chains)."""
+    graph = worst_case_graph(6)
+    g = Grammar.from_text("S -> a S b | a b").to_cnf()
+    rel = _run_all_engines(graph, g)
+    expect = hellings_cfpq(graph, g)
+    assert rel["S"] == expect["S"]
+    assert len(rel["S"]) > graph.n_nodes  # dense result
+
+
+def test_repeat_graph_scales_result_linearly():
+    base = ontology_graph(20, 40, seed=3)
+    g = query1_grammar().to_cnf()
+    r1 = hellings_cfpq(base, g)["S"]
+    rel = _run_all_engines(base.repeat(3), g)
+    assert len(rel["S"]) == 3 * len(r1)

@@ -1,0 +1,96 @@
+"""Pallas bitmm kernel: shape/dtype sweep against the pure-jnp oracle.
+
+Runs in interpret mode (CPU container); the kernel body is executed per grid
+step exactly as the TPU program would be."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.matrices import pack_bits, unpack_bits
+from repro.kernels import ops, ref
+from repro.kernels.bitmm import bitmm_pallas
+
+
+def _random_packed(rng, b, n, density=0.1):
+    dense = rng.random((b, n, n)) < density
+    return pack_bits(jnp.asarray(dense)), dense
+
+
+@pytest.mark.parametrize("n", [128, 256, 512])
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+def test_bitmm_matches_oracle(n, b, density):
+    rng = np.random.default_rng(n * 1000 + b * 10 + int(density * 10))
+    lhs_p, lhs = _random_packed(rng, b, n, density)
+    rhs_p, rhs = _random_packed(rng, b, n, density)
+    got = ops.bitmm(lhs_p, rhs_p)
+    want = ref.bitmm_ref(lhs_p, rhs_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cross-check against a numpy boolean matmul
+    want_dense = np.einsum("bik,bkj->bij", lhs, rhs) > 0
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(got, n)), want_dense
+    )
+
+
+@pytest.mark.parametrize("ti,tw,tk", [(128, 4, 128), (64, 8, 256), (256, 8, 512)])
+def test_bitmm_tile_shapes(ti, tw, tk):
+    """Tiling must not change the result (block boundary correctness)."""
+    n = 512
+    rng = np.random.default_rng(7)
+    lhs_p, _ = _random_packed(rng, 1, n, 0.1)
+    rhs_p, _ = _random_packed(rng, 1, n, 0.1)
+    got = bitmm_pallas(lhs_p, rhs_p, ti=ti, tw=tw, tk=tk, interpret=True)
+    want = ref.bitmm_ref(lhs_p, rhs_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitmm_identity():
+    n = 128
+    eye = jnp.eye(n, dtype=bool)[None]
+    eye_p = pack_bits(eye)
+    rng = np.random.default_rng(0)
+    rhs_p, rhs = _random_packed(rng, 1, n, 0.2)
+    got = ops.bitmm(eye_p, rhs_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rhs_p))
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(1)
+    for n in (1, 31, 32, 33, 100, 128, 300):
+        x = jnp.asarray(rng.random((2, 5, n)) < 0.3)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_bits(pack_bits(x), n)), np.asarray(x)
+        )
+
+
+def test_bitmm_traces_for_tpu():
+    """The non-interpret kernel must trace with TPU block specs (CPU backend
+    cannot *lower* pallas_call, but tracing exercises the BlockSpec index
+    maps, grid mapping, and the kernel jaxpr exactly as TPU lowering would)."""
+    n = 512
+    lhs = jax.ShapeDtypeStruct((2, n, n // 32), jnp.uint32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: bitmm_pallas(a, b, ti=128, tw=16, tk=512)
+    )(lhs, lhs)
+    assert "pallas_call" in str(jaxpr)
+
+
+@pytest.mark.parametrize("n", [128, 256])
+@pytest.mark.parametrize("density", [0.05, 0.3])
+def test_bitmm_or_fused_epilogue(n, density):
+    """Fused C = acc | (lhs x rhs) kernel == oracle composition."""
+    from repro.kernels.bitmm import bitmm_or_pallas
+
+    rng = np.random.default_rng(n + int(density * 100))
+    lhs_p, _ = _random_packed(rng, 2, n, density)
+    rhs_p, _ = _random_packed(rng, 2, n, density)
+    acc_p, _ = _random_packed(rng, 2, n, density)
+    got = bitmm_or_pallas(
+        lhs_p, rhs_p, acc_p, ti=64, tw=n // 32, tk=n, interpret=True
+    )
+    want = ref.bitmm_or_ref(lhs_p, rhs_p, acc_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # monotone: accumulator bits survive
+    assert (np.asarray(got & acc_p) == np.asarray(acc_p)).all()

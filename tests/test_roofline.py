@@ -1,0 +1,61 @@
+"""HLO collective parser + opt-engine correctness."""
+import numpy as np
+
+from repro.core import closure
+from repro.core.grammar import PAPER_EXAMPLE_CNF, query1_grammar
+from repro.core.graph import ontology_graph, paper_example_graph
+from repro.core.matrices import ProductionTables, init_matrix, pack_bits
+from repro.roofline import hlo
+
+
+def test_opt_engine_equals_dense():
+    for graph, g in [
+        (paper_example_graph(), PAPER_EXAMPLE_CNF),
+        (ontology_graph(30, 60, seed=3), query1_grammar().to_cnf()),
+        (ontology_graph(50, 120, seed=9), query1_grammar().to_cnf()),
+    ]:
+        tables = ProductionTables.from_grammar(g)
+        T0 = init_matrix(graph, g)
+        ref = np.asarray(closure.dense_closure(T0, tables))
+        got = np.asarray(closure.opt_closure(T0, tables))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_opt_step_monotone():
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(20, 40, seed=4)
+    tables = ProductionTables.from_grammar(g)
+    T0 = init_matrix(graph, g)
+    Tp = pack_bits(T0)
+    Tp1 = closure.opt_step(Tp, tables, n=T0.shape[-1])
+    # monotone growth: every old bit survives
+    assert (np.asarray(Tp1 & Tp) == np.asarray(Tp)).all()
+
+
+HLO_SAMPLE = """
+  %ag = bf16[8,128,256]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar.1 = f32[1024]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[4,64]<=[256], dimensions={0}
+  %cp = u32[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %done = f32[8]{0} all-gather-done(%h)
+"""
+
+
+def test_collective_parser():
+    stats = hlo.collective_stats(HLO_SAMPLE, 256)
+    ag = stats["all-gather"]
+    assert ag["count"] == 1
+    assert ag["out_bytes"] == 8 * 128 * 256 * 2
+    np.testing.assert_allclose(ag["moved_bytes"], ag["out_bytes"] * 15 / 16)
+    ar = stats["all-reduce"]
+    assert ar["out_bytes"] == 4096
+    np.testing.assert_allclose(ar["moved_bytes"], 4096 * 2 * 3 / 4)
+    rs = stats["reduce-scatter"]
+    np.testing.assert_allclose(rs["moved_bytes"], 64 * 4 * 63)
+    assert stats["collective-permute"]["moved_bytes"] == 32 * 32 * 4
+    assert stats["_total"]["count"] == 4  # -done not double-counted
+
+
+def test_parser_ignores_non_collectives():
+    txt = "%d = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}"
+    assert hlo.collective_stats(txt, 8)["_total"]["count"] == 0

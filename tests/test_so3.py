@@ -1,0 +1,91 @@
+"""SO(3) foundations: Y(Rd) = D(R) Y(d), orthogonality, Gaunt expansion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import so3
+
+L_MAX = 6
+
+
+def _random_rotation(rng):
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_wigner_rotates_sph_harm(seed):
+    """The fundamental identity Y(R d) = D^l(R) Y(d) for every l <= 6 —
+    verifies the SH evaluator and the Ivanic-Ruedenberg recursion together."""
+    rng = np.random.default_rng(seed)
+    R = _random_rotation(rng)
+    d = rng.normal(size=(32, 3))
+    d /= np.linalg.norm(d, axis=1, keepdims=True)
+    Y = np.asarray(so3.real_sph_harm(jnp.asarray(d), L_MAX))
+    Y_rot = np.asarray(so3.real_sph_harm(jnp.asarray(d @ R.T), L_MAX))
+    Ds = so3.wigner_stack(jnp.asarray(R)[None], L_MAX)
+    for l in range(L_MAX + 1):
+        D = np.asarray(Ds[l])[0]
+        sl = slice(l * l, (l + 1) ** 2)
+        np.testing.assert_allclose(
+            Y_rot[:, sl], Y[:, sl] @ D.T, rtol=1e-4, atol=1e-5
+        )
+
+
+def test_wigner_orthogonal():
+    rng = np.random.default_rng(3)
+    R = jnp.asarray(np.stack([_random_rotation(rng) for _ in range(4)]))
+    for l, D in enumerate(so3.wigner_stack(R, L_MAX)):
+        eye = np.eye(2 * l + 1)[None].repeat(4, 0)
+        np.testing.assert_allclose(
+            np.asarray(D @ jnp.swapaxes(D, -1, -2)), eye, atol=1e-5
+        )
+
+
+def test_rotation_to_z():
+    rng = np.random.default_rng(4)
+    d = rng.normal(size=(64, 3))
+    d /= np.linalg.norm(d, axis=1, keepdims=True)
+    d[0] = [0.0, 0.0, 1.0]
+    d[1] = [0.0, 0.0, -1.0]
+    R = np.asarray(so3.rotation_to_z(jnp.asarray(d)))
+    z = np.einsum("eij,ej->ei", R, d)
+    np.testing.assert_allclose(z, np.tile([0, 0, 1.0], (64, 1)), atol=1e-5)
+    # proper rotations
+    np.testing.assert_allclose(np.linalg.det(R), np.ones(64), atol=1e-5)
+
+
+@pytest.mark.parametrize("l1,l2", [(1, 1), (1, 2), (2, 2)])
+def test_gaunt_product_expansion(l1, l2):
+    """Y_l1m1 Y_l2m2 == sum_LM G Y_LM pointwise on fresh random directions."""
+    rng = np.random.default_rng(5)
+    d = rng.normal(size=(40, 3))
+    d /= np.linalg.norm(d, axis=1, keepdims=True)
+    Y = np.asarray(so3.real_sph_harm(jnp.asarray(d), l1 + l2), np.float64)
+    lhs = np.einsum(
+        "sa,sb->sab",
+        Y[:, l1 * l1 : (l1 + 1) ** 2],
+        Y[:, l2 * l2 : (l2 + 1) ** 2],
+    )
+    rhs = np.zeros_like(lhs)
+    for L in range(0, l1 + l2 + 1):
+        G = so3.real_gaunt(l1, l2, L)
+        rhs += np.einsum("abc,sc->sab", G, Y[:, L * L : (L + 1) ** 2])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-7)
+
+
+def test_gaunt_selection_rules():
+    # parity: l1+l2+l3 odd -> zero
+    assert np.allclose(so3.real_gaunt(1, 1, 1), 0.0)
+    # triangle violation -> zero
+    assert np.allclose(so3.real_gaunt(1, 1, 4), 0.0)
+    # l3=0 couples only identical irreps: G(l,l,0) ∝ identity
+    G = so3.real_gaunt(2, 2, 0)
+    off = G[..., 0] - np.diag(np.diag(G[..., 0]))
+    assert np.allclose(off, 0.0, atol=1e-6)
+    assert np.abs(np.diag(G[..., 0])).min() > 1e-3
