@@ -1,0 +1,127 @@
+"""Query-engine benchmark: batched single-source vs all-pairs closure.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine
+    PYTHONPATH=src python -m benchmarks.bench_engine --sizes 256 1024
+
+Workload model: a graph of disjoint "communities" (the paper's g1-g3
+repeat construction — one ~128-node ontology tree repeated n/128 times)
+queried with the same-generation grammar.  A single-source request only
+needs the closure rows of its own community, so the masked engine does
+|P|·R²·n work against the all-pairs |P|·n³; the gap widens with n while
+the answer stays identical.
+
+Emits ONE JSON object on stdout:
+  {"engine": ..., "sources": k, "results": [
+     {"n": 256, "allpairs_s": ..., "batch_miss_s": ..., "batch_hit_s": ...,
+      "per_query_miss_s": ..., "active_rows": ..., "speedup": ...}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.grammar import Grammar
+from repro.core.graph import Graph
+from repro.core.matrices import ProductionTables, init_matrix
+from repro.core.semantics import closure_engines
+from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine.plan import MASKED_ENGINES
+
+#: same-generation query over a class hierarchy (paper Query 1 shape,
+#: single label pair to keep |P| small and the workload uniform)
+GRAMMAR = "S -> up S down | up down"
+
+COMMUNITY = 128  # nodes per disjoint community (tree)
+
+
+def community_graph(n: int, branching: int = 3, seed: int = 0) -> Graph:
+    """A forest of n/COMMUNITY disjoint trees with up/down edge pairs."""
+    rng = np.random.default_rng(seed)
+    edges: list[tuple[int, str, int]] = []
+    for c in range(1, COMMUNITY):
+        p = int(rng.integers(max(0, (c - 1) // branching), c))
+        edges.append((c, "up", p))
+        edges.append((p, "down", c))
+    return Graph(COMMUNITY, edges).repeat(n // COMMUNITY)
+
+
+def _time(fn) -> tuple[object, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def bench_size(n: int, engine: str, n_sources: int) -> dict:
+    g = Grammar.from_text(GRAMMAR).to_cnf()
+    graph = community_graph(n)
+    tables = ProductionTables.from_grammar(g)
+    T0 = init_matrix(graph, g)
+    assert T0.shape[-1] == n, "sizes must be multiples of 128"
+
+    # --- all-pairs reference (AOT-compiled so compile time is excluded) ---
+    fn = closure_engines()[engine]
+    exe = fn.lower(T0, tables).compile()
+    T_all = exe(T0)
+    T_all.block_until_ready()
+    T_all, allpairs_s = _time(lambda: exe(T0).block_until_ready())
+    T_all = np.asarray(T_all)
+
+    # --- batched single-source through the service ---
+    # one source per community: the realistic "which nodes does user m
+    # reach" workload, coalesced into a single masked-closure call
+    n_sources = min(n_sources, n // COMMUNITY)
+    sources = tuple(t * COMMUNITY + 1 for t in range(n_sources))
+    queries = [Query(g, "S", sources=(m,)) for m in sources]
+    plans = CompiledClosureCache()
+    # populate the plan cache (compile) with a throwaway engine instance,
+    # then time a fresh instance sharing the warm plans: the measured miss
+    # is pure closure work, no tracing/compilation
+    QueryEngine(graph, engine=engine, plans=plans).query_batch(queries)
+    eng = QueryEngine(graph, engine=engine, plans=plans)
+    rs, batch_miss_s = _time(lambda: eng.query_batch(queries))
+    _, batch_hit_s = _time(lambda: eng.query_batch(queries))
+
+    a0 = g.index_of("S")
+    for r in rs:  # single-source answers == rows of the all-pairs closure
+        (m,) = r.query.sources
+        expect = {
+            (m, int(j)) for j in np.nonzero(T_all[a0, m, : graph.n_nodes])[0]
+        }
+        assert r.pairs == expect, f"mismatch at n={n} source={m}"
+
+    return {
+        "n": n,
+        "n_nodes": graph.n_nodes,
+        "n_edges": graph.n_edges,
+        "allpairs_s": round(allpairs_s, 4),
+        "batch_miss_s": round(batch_miss_s, 4),
+        "batch_hit_s": round(batch_hit_s, 6),
+        "per_query_miss_s": round(batch_miss_s / n_sources, 4),
+        "active_rows": rs[0].stats["active_rows"],
+        "speedup": round(allpairs_s / max(batch_miss_s, 1e-9), 1),
+    }
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--sizes", type=int, nargs="+", default=[256, 1024, 4096]
+    )
+    ap.add_argument("--engine", default="dense", choices=sorted(MASKED_ENGINES))
+    ap.add_argument("--sources", type=int, default=8)
+    args = ap.parse_args(argv)
+    out = {
+        "engine": args.engine,
+        "sources": args.sources,
+        "grammar": GRAMMAR,
+        "results": [bench_size(n, args.engine, args.sources) for n in args.sizes],
+    }
+    print(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,14 @@ Prints CSV blocks:
   [table1-2]  Q1/Q2 over the ontology suite (paper Tables 1 & 2)
   [scaling]   graph-size scaling + fixpoint iteration counts (g1-g3 obs.)
   [kernels]   Boolean-matmul kernel micro-bench
+  [engine]    single-source query engine vs all-pairs (quick sizes; the
+              full n ∈ {256, 1024, 4096} sweep is `-m benchmarks.bench_engine`)
 """
 from __future__ import annotations
 
 
 def main() -> None:
-    from . import bench_cfpq, bench_kernels, bench_scaling
+    from . import bench_cfpq, bench_engine, bench_kernels, bench_scaling
 
     print("[table1-2] CFPQ ontology suite (paper Tables 1-2 analog)")
     print("\n".join(bench_cfpq.main()))
@@ -21,6 +23,9 @@ def main() -> None:
     print()
     print("[kernels] boolean matmul micro-bench")
     print("\n".join(bench_kernels.main()))
+    print()
+    print("[engine] single-source vs all-pairs (quick)")
+    bench_engine.main(["--sizes", "256", "1024"])
 
 
 if __name__ == "__main__":

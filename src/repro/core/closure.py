@@ -59,6 +59,22 @@ def _scatter_or_bool(new_per_prod: jnp.ndarray, tables: ProductionTables):
     return zeros.at[a_idx].max(new_per_prod)
 
 
+def _scatter_or_packed(
+    prod: jnp.ndarray, tables: ProductionTables
+) -> jnp.ndarray:
+    """Packed analog of _scatter_or_bool: trace-time OR tree per LHS
+    nonterminal (P and N are grammar-sized), (P, …, w) -> (N, …, w)."""
+    groups = tables.groups()
+    rows = []
+    for a in range(tables.n_nonterms):
+        ps = groups.get(a)
+        if ps:
+            rows.append(functools.reduce(operator.or_, [prod[p] for p in ps]))
+        else:
+            rows.append(jnp.zeros(prod.shape[1:], prod.dtype))
+    return jnp.stack(rows)
+
+
 def _iter_limit(T: jnp.ndarray, max_iters: int | None) -> int:
     # Thm. 3 bounds iterations by |V|^2 |N|; the derivation-height argument
     # (Lemma 4.1 + doubling) means n*N always suffices in this formulation.
@@ -256,6 +272,199 @@ def opt_step(T_packed: jnp.ndarray, tables: ProductionTables, n: int, plan=None)
 
 
 # ---------------------------------------------------------------------- #
+# Source-restricted (masked) closure engines — the query-engine tentpole.
+#
+# A single-/multi-source CFPQ ("which j are reachable from these sources
+# under nonterminal A?") does not need the all-pairs T^cf: row i of T^cf
+# depends only on rows k reachable from i (T^cf[A,i,j] splits as
+# T^cf[B,i,k] ∧ T^cf[C,k,j], and any such k is reachable from i through
+# base edges).  These engines therefore maintain a row mask M, seeded with
+# the requested sources, and
+#
+#   1. gather the ≤ R active rows into a compacted (R, n) sub-problem, so
+#      one iteration costs |P|·R²·n (dense) / |P|·R·n·w words (bitpacked)
+#      instead of the all-pairs |P|·n³ — asymptotically less work while the
+#      reachable set stays small;
+#   2. expand M with every column reached from an active row (those are the
+#      rows the next iteration may contract against);
+#   3. run the usual grow-until-fixpoint loop over BOTH T and M.
+#
+# R (``row_capacity``) is a static shape so the loop stays jittable; if the
+# active set outgrows it the engine stops with ``overflowed=True`` and the
+# caller re-enters with a larger capacity, warm-starting from the returned
+# (T, M) — the fixpoint is monotone, so no work is lost.  At the fixpoint,
+# rows of T selected by M equal the corresponding rows of the all-pairs
+# closure (proof: soundness is monotonicity; completeness is induction on
+# derivation height — the B-operand row is a source row, and its k column
+# joins M before the C-operand row is needed).
+# ---------------------------------------------------------------------- #
+
+
+def _active_rows(M: jnp.ndarray, R: int):
+    """First R set rows of the mask: (idx (R,) int32, valid (R,) bool)."""
+    count = jnp.sum(M, dtype=jnp.int32)
+    idx = jnp.nonzero(M, size=R, fill_value=0)[0].astype(jnp.int32)
+    valid = jnp.arange(R, dtype=jnp.int32) < jnp.minimum(count, R)
+    return idx, valid
+
+
+def _masked_limit(T: jnp.ndarray, max_iters: int | None) -> int:
+    # the mask can grow for at most n extra iterations beyond the T bound
+    return _iter_limit(T, max_iters) + T.shape[-1]
+
+
+@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+def masked_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+):
+    """Source-restricted closure on the dense MXU path.
+
+    ``src_mask`` is an (n,) bool row seed.  Returns ``(T, M, overflowed)``;
+    rows of ``T`` where ``M`` is set equal the all-pairs closure rows iff
+    ``overflowed`` is False (otherwise re-enter with the returned state and
+    a larger ``row_capacity``).
+    """
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        # T^cf == T0: every row is already exact.
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        T, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = T[:, idx, :] & valid[None, :, None]  # (N, R, n) active rows
+        # compact the contraction axis too: only rows in M can contribute
+        lhs = rows[b_idx][:, :, idx] & valid[None, None, :]  # (P, R, R)
+        prod = _bool_matmul(lhs, rows[c_idx])  # (P, R, n)
+        new_r = _scatter_or_bool(prod, tables) & valid[None, :, None]
+        # fill lanes are zeroed, so each target row has one real contributor
+        new = jnp.zeros_like(T).at[:, idx, :].max(new_r)
+        M_next = M | jnp.any(rows, axis=(0, 1))  # columns reached -> new rows
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(new & ~T) | jnp.any(M_next & ~M)
+        return T | new, M_next, grew, overflow, it + 1
+
+    state = (T, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    T, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return T, M, overflow
+
+
+@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+def masked_frontier_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+):
+    """Masked closure with the frontier (delta) trick: only products through
+    entries discovered in the previous iteration are formed, and rows newly
+    admitted to the mask enter the delta with their base edges."""
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+
+    def cond(state):
+        _, D, _, overflow, it = state
+        return jnp.any(D) & ~overflow & (it < limit)
+
+    def body(state):
+        T, D, M, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows_t = T[:, idx, :] & valid[None, :, None]
+        rows_d = D[:, idx, :] & valid[None, :, None]
+        lhs_t = rows_t[b_idx][:, :, idx] & valid[None, None, :]
+        lhs_d = rows_d[b_idx][:, :, idx] & valid[None, None, :]
+        prod = _bool_matmul(lhs_t, rows_d[c_idx]) | _bool_matmul(
+            lhs_d, rows_t[c_idx]
+        )
+        new_r = _scatter_or_bool(prod, tables) & valid[None, :, None]
+        new = jnp.zeros_like(T).at[:, idx, :].max(new_r)
+        M_next = M | jnp.any(rows_t, axis=(0, 1))
+        newly = M_next & ~M  # rows activated now: their base edges are fresh
+        D_next = (new & ~T) | (T & newly[None, :, None])
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        return T | new, D_next, M_next, overflow, it + 1
+
+    D0 = T & src_mask[None, :, None]
+    state = (T, D0, src_mask, jnp.bool_(False), 0)
+    T, _, M, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return T, M, overflow
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "use_kernel"),
+)
+def masked_bitpacked_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    use_kernel: bool = True,
+):
+    """Source-restricted closure on packed words via the rectangular bitmm
+    path: lhs is the (P, R, w) gather of active rows, rhs the full (P, n, w)
+    packed state (contraction against base-only rows is sound — their
+    entries are a subset of the true closure — and speeds convergence)."""
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+    mm = kops.bitmm if use_kernel else kref.bitmm_ref
+    Tp0 = pack_bits(T)  # (N, n, w)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        Tp, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], Tp[:, idx, :], 0)  # (N, R, w)
+        prod = mm(rows[b_idx], Tp[c_idx])  # (P, R, w)
+        new_r = jnp.where(
+            valid[None, :, None], _scatter_or_packed(prod, tables), 0
+        )
+        new = jnp.zeros_like(Tp).at[:, idx, :].max(new_r)
+        reach_w = jax.lax.reduce(
+            rows, jnp.uint32(0), jax.lax.bitwise_or, (0, 1)
+        )  # (w,) packed columns reached from active rows
+        M_next = M | unpack_bits(reach_w, n)
+        Tp_next = Tp | new
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
+        return Tp_next, M_next, grew, overflow, it + 1
+
+    state = (Tp0, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    Tp, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return unpack_bits(Tp, n), M, overflow
+
+
+# ---------------------------------------------------------------------- #
 # Bitpacked engine.
 # ---------------------------------------------------------------------- #
 
@@ -281,7 +490,6 @@ def bitpacked_closure(
 
     b_idx = jnp.asarray(tables.b_idx, jnp.int32)
     c_idx = jnp.asarray(tables.c_idx, jnp.int32)
-    groups = tables.groups()
     n = T.shape[-1]
     limit = _iter_limit(T, max_iters)
     Tp = pack_bits(T)  # (N, n, w) uint32
@@ -290,16 +498,7 @@ def bitpacked_closure(
     def body(state):
         Tp, _, it = state
         prod = mm(Tp[b_idx], Tp[c_idx])  # (P, n, w) uint32
-        # Trace-time OR tree per LHS nonterminal (P and N are grammar-sized).
-        rows = []
-        for a in range(tables.n_nonterms):
-            ps = groups.get(a)
-            if ps:
-                rows.append(functools.reduce(operator.or_, [prod[p] for p in ps]))
-            else:
-                rows.append(jnp.zeros(prod.shape[1:], prod.dtype))
-        new = jnp.stack(rows)
-        Tp_next = Tp | new
+        Tp_next = Tp | _scatter_or_packed(prod, tables)
         grew = jnp.any(Tp_next != Tp)
         return Tp_next, grew, it + 1
 

@@ -146,6 +146,30 @@ def extract_path(
 # ---------------------------------------------------------------------- #
 
 
+def _masked_allpairs(T: jnp.ndarray, tables: ProductionTables) -> jnp.ndarray:
+    """The masked engine with every row seeded == the all-pairs closure."""
+    from . import closure as _closure
+
+    n = T.shape[-1]
+    Tm, _, _ = _closure.masked_closure(
+        T, tables, jnp.ones((n,), jnp.bool_), row_capacity=n
+    )
+    return Tm
+
+
+def closure_engines() -> dict:
+    """Dispatch table of all-pairs closure engines by name."""
+    from . import closure as _closure
+
+    return {
+        "dense": _closure.dense_closure,
+        "frontier": _closure.frontier_closure,
+        "bitpacked": _closure.bitpacked_closure,
+        "opt": _closure.opt_closure,
+        "masked": _masked_allpairs,
+    }
+
+
 def evaluate_relational(
     graph: Graph,
     g: CNFGrammar,
@@ -154,16 +178,11 @@ def evaluate_relational(
 ) -> set[tuple[int, int]]:
     """Full relational CFPQ: returns R_start restricted to real nodes,
     including the (m, m) pairs contributed by a nullable start symbol."""
-    from . import closure as _closure
     from .matrices import relations_from_matrix
 
     tables = ProductionTables.from_grammar(g)
     T0 = init_matrix(graph, g)
-    fn = {
-        "dense": _closure.dense_closure,
-        "frontier": _closure.frontier_closure,
-        "bitpacked": _closure.bitpacked_closure,
-    }[engine]
+    fn = closure_engines()[engine]
     T = fn(T0, tables)
     rel = relations_from_matrix(np.asarray(T), g, graph.n_nodes)[start]
     if start in g.nullable:

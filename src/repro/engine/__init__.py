@@ -1,0 +1,19 @@
+"""Batched single-/multi-source CFPQ query engine (serving subsystem).
+
+``QueryEngine`` coalesces concurrent queries over shared grammars into one
+masked-closure call each and caches both compiled executables (plan.py)
+and materialized closure rows (service.py).
+"""
+from .plan import CompiledClosureCache, PlanKey, bucket_for, row_buckets
+from .service import Query, QueryEngine, QueryResult, grammar_key
+
+__all__ = [
+    "CompiledClosureCache",
+    "PlanKey",
+    "Query",
+    "QueryEngine",
+    "QueryResult",
+    "bucket_for",
+    "grammar_key",
+    "row_buckets",
+]

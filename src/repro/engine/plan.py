@@ -1,0 +1,105 @@
+"""Query planning: the compiled-closure cache.
+
+A closure executable is determined by ``(grammar tables, engine, padded n,
+row capacity)`` — all static shape/constant information.  jax.jit already
+memoizes traces by static args, but the service wants the reuse *explicit
+and observable* (cache hit/miss counters in per-request stats) and wants to
+skip Python-side dispatch entirely on the hot path, so this cache stores
+the AOT ``lower(...).compile()`` executable per plan key.
+
+Row capacities are bucketed (powers of two from 128 up to n) so warm
+restarts after an active-set overflow reuse at most O(log n) distinct
+executables per grammar instead of compiling per exact source count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import closure as _closure
+from repro.core.matrices import ProductionTables
+
+#: masked (source-restricted) closure per backend — the serving fast path.
+MASKED_ENGINES = {
+    "dense": _closure.masked_closure,
+    "frontier": _closure.masked_frontier_closure,
+    "bitpacked": _closure.masked_bitpacked_closure,
+}
+
+
+def row_buckets(n: int) -> list[int]:
+    """Allowed row capacities for padded size n: 128, 256, ... , n."""
+    out: list[int] = []
+    r = 128
+    while r < n:
+        out.append(r)
+        r *= 2
+    out.append(n)
+    return out
+
+
+def bucket_for(n_rows: int, n: int) -> int:
+    """Smallest bucket holding ``n_rows`` active rows."""
+    for r in row_buckets(n):
+        if r >= n_rows:
+            return r
+    return n
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    """Everything that determines a compiled closure executable."""
+
+    tables: ProductionTables
+    engine: str
+    n: int  # padded matrix size
+    row_capacity: int
+
+
+@dataclass
+class PlanStats:
+    compile_misses: int = 0
+    compile_hits: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "compile_misses": self.compile_misses,
+            "compile_hits": self.compile_hits,
+        }
+
+
+class CompiledClosureCache:
+    """AOT-compiled masked-closure executables keyed on PlanKey.
+
+    ``get(key)`` returns a callable ``(T, src_mask) -> (T, mask, overflow)``
+    with the grammar tables and row capacity baked in; a repeated key never
+    retraces (the executable is reused as-is).
+    """
+
+    def __init__(self) -> None:
+        self._exe: dict[PlanKey, object] = {}
+        self.stats = PlanStats()
+
+    def __len__(self) -> int:
+        return len(self._exe)
+
+    def get(self, key: PlanKey):
+        exe = self._exe.get(key)
+        if exe is None:
+            self.stats.compile_misses += 1
+            exe = self._exe[key] = self._build(key)
+        else:
+            self.stats.compile_hits += 1
+        return exe
+
+    def _build(self, key: PlanKey):
+        fn = MASKED_ENGINES[key.engine]
+        T = jax.ShapeDtypeStruct(
+            (key.tables.n_nonterms, key.n, key.n), jnp.bool_
+        )
+        m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
+        return fn.lower(
+            T, key.tables, m, row_capacity=key.row_capacity
+        ).compile()

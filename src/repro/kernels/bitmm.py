@@ -115,14 +115,21 @@ def bitmm_pallas(
 ) -> jnp.ndarray:
     """C = lhs x rhs over the AND/OR semiring on packed words.
 
-    Shapes: lhs (B, n, w), rhs (B, n, w), out (B, n, w) with w = n // 32.
-    ``n`` must divide by max(ti, tk) and ``w`` by tw (ops.py picks tiles).
+    Shapes: lhs (B, m, k // 32), rhs (B, k, w), out (B, m, w) — rectangular
+    row counts are allowed (the query engine contracts a compacted block of
+    m = row_capacity active rows against the full packed state).  ``m`` must
+    divide by ti, the contraction ``k`` by tk, and ``w`` by tw (ops.py picks
+    legal tiles).
     """
-    B, n, w = lhs_packed.shape
-    assert rhs_packed.shape == (B, n, w), (lhs_packed.shape, rhs_packed.shape)
-    assert n % ti == 0 and n % tk == 0 and w % tw == 0 and tk % 32 == 0
+    B, m, wk = lhs_packed.shape
+    _, k, w = rhs_packed.shape
+    assert rhs_packed.shape[0] == B and wk * 32 == k, (
+        lhs_packed.shape,
+        rhs_packed.shape,
+    )
+    assert m % ti == 0 and k % tk == 0 and w % tw == 0 and tk % 32 == 0
 
-    grid = (B, n // ti, w // tw, n // tk)
+    grid = (B, m // ti, w // tw, k // tk)
     kernel = functools.partial(_bitmm_kernel, tk=tk)
     return pl.pallas_call(
         kernel,
@@ -132,6 +139,6 @@ def bitmm_pallas(
             pl.BlockSpec((1, tk, tw), lambda b, i, j, k: (b, k, j)),
         ],
         out_specs=pl.BlockSpec((1, ti, tw), lambda b, i, j, k: (b, i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, n, w), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((B, m, w), jnp.uint32),
         interpret=interpret,
     )(lhs_packed, rhs_packed)

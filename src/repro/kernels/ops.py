@@ -21,19 +21,23 @@ _ON_TPU = jax.default_backend() == "tpu"
 _INTERPRET_ELEMS_BUDGET = 1 << 22
 
 
-def _pick_tiles(n: int, w: int) -> tuple[int, int, int]:
-    ti = 128 if n % 128 == 0 else n
+def _pick_tiles(m: int, k: int, w: int) -> tuple[int, int, int]:
+    ti = 128 if m % 128 == 0 else m
     tw = 128 if w % 128 == 0 else w
-    tk = 4096 if n % 4096 == 0 else n
+    tk = 4096 if k % 4096 == 0 else k
     return ti, tw, tk
 
 
 def bitmm(lhs_packed: jnp.ndarray, rhs_packed: jnp.ndarray) -> jnp.ndarray:
-    """Bitpacked Boolean matmul: (B, n, w) x (B, n, w) -> (B, n, w)."""
-    B, n, w = lhs_packed.shape
-    if not _ON_TPU and B * n * w > _INTERPRET_ELEMS_BUDGET:
+    """Bitpacked Boolean matmul: (B, m, k//32) x (B, k, w) -> (B, m, w).
+
+    ``m`` may differ from ``k`` (the masked closure contracts a compacted
+    block of active rows against the full packed state)."""
+    B, m, _ = lhs_packed.shape
+    k, w = rhs_packed.shape[-2:]
+    if not _ON_TPU and B * max(m, k) * w > _INTERPRET_ELEMS_BUDGET:
         return _ref.bitmm_ref(lhs_packed, rhs_packed)
-    ti, tw, tk = _pick_tiles(n, w)
+    ti, tw, tk = _pick_tiles(m, k, w)
     return bitmm_pallas(
         lhs_packed, rhs_packed, ti=ti, tw=tw, tk=tk, interpret=not _ON_TPU
     )
