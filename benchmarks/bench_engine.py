@@ -105,6 +105,44 @@ def bench_size(n: int, engine: str, n_sources: int) -> dict:
     }
 
 
+def bench_retrace(n: int, engine: str) -> dict:
+    """Bucket-growth retrace cost (ROADMAP "quantify retrace cost").
+
+    A cold multi-community query whose active set (~4 communities, ~512
+    rows) overflows the first capacity bucket is served twice: starting at
+    capacity 128 (the default ladder: compile at 128, overflow, 256, ...)
+    and starting directly at capacity n (one big executable, no overflow
+    restarts).  Reports compiles x wall for both, so the ladder's retrace
+    overhead is a number instead of a guess.
+    """
+    g = Grammar.from_text(GRAMMAR).to_cnf()
+    graph = community_graph(n)
+    k = min(4, n // COMMUNITY)
+    sources = tuple(t * COMMUNITY + 1 for t in range(k))
+    out: dict = {"n": n, "touched_communities": k}
+    for label, cap0 in (("cap128", 128), ("capn", n)):
+        plans = CompiledClosureCache()
+        eng = QueryEngine(
+            graph, engine=engine, plans=plans, row_capacity=cap0
+        )
+        r, cold_s = _time(
+            lambda: eng.query(Query(g, "S", sources=sources))
+        )
+        _, steady_s = _time(
+            lambda: eng.query(Query(g, "S", sources=sources))
+        )
+        out[label] = {
+            "compiles": plans.stats.compile_misses,
+            "cold_s": round(cold_s, 4),
+            "hit_s": round(steady_s, 6),
+            "active_rows": r.stats["active_rows"],
+        }
+    out["cold_overhead_x"] = round(
+        out["cap128"]["cold_s"] / max(out["capn"]["cold_s"], 1e-9), 2
+    )
+    return out
+
+
 def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -112,12 +150,20 @@ def main(argv: list[str] | None = None) -> dict:
     )
     ap.add_argument("--engine", default="dense", choices=sorted(MASKED_ENGINES))
     ap.add_argument("--sources", type=int, default=8)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny CI config: n=256 only, 2 sources",
+    )
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.sizes, args.sources = [256], 2
     out = {
         "engine": args.engine,
         "sources": args.sources,
         "grammar": GRAMMAR,
         "results": [bench_size(n, args.engine, args.sources) for n in args.sizes],
+        "retrace": [bench_retrace(n, args.engine) for n in args.sizes],
     }
     print(json.dumps(out, indent=2))
     return out

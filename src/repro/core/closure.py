@@ -465,6 +465,202 @@ def masked_bitpacked_closure(
 
 
 # ---------------------------------------------------------------------- #
+# Reverse-reachability sweep (delta-repair support; see DELTA.md).
+#
+# Row i of any closure depends only on rows reachable from i through base
+# edges (the masked-closure argument above).  Dually: an edge edit at row u
+# can only change closure rows i that REACH u.  ``reverse_reachable_mask``
+# computes that ancestor set as a Boolean matvec fixpoint on the label-blind
+# base adjacency — O(n^2) per step for diameter steps, vs the |P| n^2 R per
+# step of a closure iteration, so the repair planner can afford to run it on
+# every delta.  delta/repair.py has the equivalent O(V+E) host BFS; this is
+# the device path for graphs whose edge lists are too big to walk in Python.
+# ---------------------------------------------------------------------- #
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def reverse_reachable_mask(
+    adj: jnp.ndarray, seeds: jnp.ndarray, max_iters: int | None = None
+) -> jnp.ndarray:
+    """Rows that can reach a seed row over ``adj`` (seeds included).
+
+    ``adj`` is the (n, n) bool label-blind adjacency (adj[i, j] iff some
+    edge i -> j); ``seeds`` an (n,) bool mask.  Fixpoint of
+    ``m <- m | adj @ m`` — one step adds the direct predecessors of the
+    current set, so it converges in at most graph-diameter iterations.
+    """
+    n = adj.shape[-1]
+    limit = max_iters if max_iters is not None else n
+
+    def cond(state):
+        _, grew, it = state
+        return grew & (it < limit)
+
+    def body(state):
+        m, _, it = state
+        hit = (
+            jax.lax.dot(
+                adj.astype(_MAT_DTYPE),
+                m.astype(_MAT_DTYPE)[:, None],
+                preferred_element_type=jnp.float32,
+            )[:, 0]
+            > 0
+        )
+        m_next = m | hit
+        return m_next, jnp.any(m_next & ~m), it + 1
+
+    m, _, _ = jax.lax.while_loop(cond, body, (seeds, jnp.bool_(True), 0))
+    return m
+
+
+# ---------------------------------------------------------------------- #
+# Repair closures (delta subsystem; see DELTA.md).
+#
+# A delta repair warm-starts from a cached state where MOST rows are known
+# exact already ("frozen") and only a small set needs recomputing.  The
+# query-path masked engines would re-admit every reached row to the active
+# set — including the frozen ones — and recompute them all.  The repair
+# variants instead treat frozen rows as already-converged constants:
+#
+#   * the compacted active block (R slots — only rows being rebuilt)
+#     contracts against a compacted CONTEXT block (C slots — active plus
+#     frozen rows), so frozen rows contribute their exact entries without
+#     being recomputed: |P|·R·C·n dense per iteration vs the query path's
+#     |P|·C'²·n with C' the whole re-seeded set (the packed variant keeps
+#     the full-width rhs — |P|·R·n·w words — since w = n/32 makes the
+#     contraction axis cheap and re-packing a gathered context is not);
+#   * mask expansion skips frozen rows (M_next = M ∪ (reached \ frozen)),
+#     so the row capacity is sized by the blast radius of the edit, not by
+#     the size of the cached state.
+#
+# Contract: at the fixpoint, rows under the returned M are exact, and
+# frozen rows are never written (bit-identical to their cached values).
+# Completeness is the usual induction on derivation height, with frozen
+# rows as base cases: an operand row is either frozen (its entries are
+# already final in T) or joins M and converges by induction.
+# ---------------------------------------------------------------------- #
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "ctx_capacity", "max_iters"),
+)
+def masked_repair_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    frozen_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    ctx_capacity: int | None = None,
+    max_iters: int | None = None,
+):
+    """Dense-path repair fixpoint.  ``src_mask`` seeds the rows to rebuild;
+    rows under ``frozen_mask`` are trusted exact and never recomputed, but
+    join the compacted contraction context (≤ ``ctx_capacity`` rows).
+    Returns ``(T, M, overflowed)`` with ``M`` the rebuilt rows; overflow
+    fires when either the active set outgrows ``row_capacity`` or the
+    context outgrows ``ctx_capacity``."""
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    C = min(ctx_capacity if ctx_capacity is not None else n, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        T, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        cidx, cvalid = _active_rows(M | frozen_mask, C)
+        rows = T[:, idx, :] & valid[None, :, None]  # (N, R, n) active rows
+        ctx = T[:, cidx, :] & cvalid[None, :, None]  # (N, C, n) context
+        # contraction axis compacted to the context: frozen rows supply
+        # their exact entries without occupying ACTIVE (output) capacity
+        lhs = rows[b_idx][:, :, cidx] & cvalid[None, None, :]  # (P, R, C)
+        prod = _bool_matmul(lhs, ctx[c_idx])  # (P, R, n)
+        new_r = _scatter_or_bool(prod, tables) & valid[None, :, None]
+        new = jnp.zeros_like(T).at[:, idx, :].max(new_r)
+        reach = jnp.any(rows, axis=(0, 1))
+        M_next = M | (reach & ~frozen_mask)
+        overflow = (jnp.sum(M_next, dtype=jnp.int32) > R) | (
+            jnp.sum(M_next | frozen_mask, dtype=jnp.int32) > C
+        )
+        grew = jnp.any(new & ~T) | jnp.any(M_next & ~M)
+        return T | new, M_next, grew, overflow, it + 1
+
+    state = (T, src_mask & ~frozen_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    T, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return T, M, overflow
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "use_kernel"),
+)
+def masked_bitpacked_repair_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    frozen_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    use_kernel: bool = True,
+):
+    """Packed-word analog of :func:`masked_repair_closure` (the bitpacked
+    query engine already contracts against the full packed state; repair
+    additionally excludes frozen rows from mask expansion)."""
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+    mm = kops.bitmm if use_kernel else kref.bitmm_ref
+    Tp0 = pack_bits(T)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        Tp, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], Tp[:, idx, :], 0)  # (N, R, w)
+        prod = mm(rows[b_idx], Tp[c_idx])  # (P, R, w)
+        new_r = jnp.where(
+            valid[None, :, None], _scatter_or_packed(prod, tables), 0
+        )
+        new = jnp.zeros_like(Tp).at[:, idx, :].max(new_r)
+        reach_w = jax.lax.reduce(
+            rows, jnp.uint32(0), jax.lax.bitwise_or, (0, 1)
+        )
+        M_next = M | (unpack_bits(reach_w, n) & ~frozen_mask)
+        Tp_next = Tp | new
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
+        return Tp_next, M_next, grew, overflow, it + 1
+
+    state = (
+        Tp0,
+        src_mask & ~frozen_mask,
+        jnp.bool_(True),
+        jnp.bool_(False),
+        0,
+    )
+    Tp, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return unpack_bits(Tp, n), M, overflow
+
+
+# ---------------------------------------------------------------------- #
 # Bitpacked engine.
 # ---------------------------------------------------------------------- #
 

@@ -8,6 +8,7 @@ are regenerated rather than downloaded).
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -15,17 +16,135 @@ import numpy as np
 INVERSE_SUFFIX = "_r"
 
 
+@dataclass(frozen=True)
+class EdgeDelta:
+    """Net effect of a graph's edge log over a version range.
+
+    ``inserted`` are edges present now that were absent at the start of the
+    range; ``deleted`` the reverse.  Edges inserted then deleted inside the
+    range (or vice versa) cancel out.
+    """
+
+    inserted: tuple[tuple[int, str, int], ...]
+    deleted: tuple[tuple[int, str, int], ...]
+
+    def __bool__(self) -> bool:
+        return bool(self.inserted or self.deleted)
+
+    @property
+    def inserted_sources(self) -> set[int]:
+        return {i for i, _, _ in self.inserted}
+
+    @property
+    def deleted_sources(self) -> set[int]:
+        return {i for i, _, _ in self.deleted}
+
+
 @dataclass
 class Graph:
-    """An edge-labeled digraph with nodes ``0..n_nodes-1``."""
+    """An edge-labeled digraph with nodes ``0..n_nodes-1``.
+
+    Mutation goes through :meth:`insert_edges` / :meth:`delete_edges`: each
+    call appends to an append-only edge log and bumps a monotone ``version``
+    counter, so consumers holding materialized state (the query engine's
+    closure cache) can ask :meth:`delta_since` for the net edit set instead
+    of re-fingerprinting the whole edge list.  Direct edits of ``edges``
+    remain possible but are invisible to the log (the engine falls back to
+    full invalidation for those).
+    """
 
     n_nodes: int
     edges: list[tuple[int, str, int]] = field(default_factory=list)
+    version: int = 0
+    _log: list[tuple[int, str, tuple[int, str, int]]] = field(
+        default_factory=list, repr=False
+    )
+    _edge_set: set | None = field(default=None, repr=False, compare=False)
+    _edge_set_len: int = field(default=-1, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     @property
     def n_edges(self) -> int:
         return len(self.edges)
+
+    # ------------------------------------------------------------------ #
+    # Mutation layer (delta subsystem; see DELTA.md).
+    # ------------------------------------------------------------------ #
+    def edge_set(self) -> set:
+        """Membership set of ``edges``, kept in sync by the mutation API so
+        a stream of small deltas pays O(delta) per insert call, not O(E).
+        Rebuilt if the edge list was edited out-of-band (detected by the
+        length heuristic; a same-length in-place swap escapes it, but the
+        query engine catches those by comparing edge sets per batch)."""
+        if self._edge_set is None or self._edge_set_len != len(self.edges):
+            self._edge_set = set(self.edges)
+            self._edge_set_len = len(self.edges)
+        return self._edge_set
+
+    def _validate_edge(self, edge: tuple[int, str, int]) -> None:
+        i, _, j = edge
+        if not (0 <= i < self.n_nodes and 0 <= j < self.n_nodes):
+            raise ValueError(f"edge {edge} outside graph of {self.n_nodes}")
+
+    def insert_edges(self, edges: list[tuple[int, str, int]]) -> int:
+        """Insert edges; already-present edges are no-ops.  Returns the new
+        version (bumped once per call that changed anything)."""
+        have = self.edge_set()
+        added = []
+        for e in edges:
+            e = (int(e[0]), e[1], int(e[2]))
+            self._validate_edge(e)
+            if e not in have:
+                have.add(e)
+                added.append(e)
+        if added:
+            self.version += 1
+            self.edges.extend(added)
+            self._edge_set_len = len(self.edges)
+            self._log.extend((self.version, "+", e) for e in added)
+        return self.version
+
+    def delete_edges(self, edges: list[tuple[int, str, int]]) -> int:
+        """Delete edges (all duplicate occurrences); absent edges are
+        no-ops.  Returns the new version.  (Deletion compacts the edge
+        list — O(E); insertion is O(delta).)"""
+        gone = set()
+        for e in edges:
+            e = (int(e[0]), e[1], int(e[2]))
+            self._validate_edge(e)
+            gone.add(e)
+        removed = sorted(gone & self.edge_set())
+        if removed:
+            self.version += 1
+            drop = set(removed)
+            self.edges[:] = [e for e in self.edges if e not in drop]
+            self._edge_set -= drop
+            self._edge_set_len = len(self.edges)
+            self._log.extend((self.version, "-", e) for e in removed)
+        return self.version
+
+    def delta_since(self, version: int) -> EdgeDelta:
+        """Net edge delta between ``version`` and the current version.
+        O(tail): the log is version-sorted, so the start is bisected."""
+        if version > self.version:
+            raise ValueError(
+                f"version {version} is ahead of the graph ({self.version})"
+            )
+        start = bisect.bisect_right(self._log, version, key=lambda r: r[0])
+        ins: set[tuple[int, str, int]] = set()
+        dels: set[tuple[int, str, int]] = set()
+        for _, op, edge in self._log[start:]:
+            if op == "+":
+                if edge in dels:
+                    dels.discard(edge)  # delete then re-insert: net no-op
+                else:
+                    ins.add(edge)
+            else:
+                if edge in ins:
+                    ins.discard(edge)  # insert then delete: net no-op
+                else:
+                    dels.add(edge)
+        return EdgeDelta(tuple(sorted(ins)), tuple(sorted(dels)))
 
     @property
     def labels(self) -> list[str]:

@@ -89,6 +89,23 @@ def init_matrix(
     return jnp.asarray(T)
 
 
+def init_matrix_rows(
+    graph: Graph, g: CNFGrammar, rows, pad_to: int | None = None
+) -> np.ndarray:
+    """Base-matrix rows for a subset of source nodes: the ``rows`` slices
+    of :func:`init_matrix`, shape ``(|N|, len(rows), n)`` — O(|rows|·n)
+    memory instead of O(n²), for delta repair's row surgery."""
+    n = pad_to if pad_to is not None else padded_size(graph.n_nodes)
+    pos = {int(r): k for k, r in enumerate(rows)}
+    out = np.zeros((g.n_nonterms, len(pos), n), dtype=bool)
+    for i, x, j in graph.edges:
+        k = pos.get(i)
+        if k is not None:
+            for a in g.term_prods.get(x, ()):
+                out[a, k, j] = True
+    return out
+
+
 # ---------------------------------------------------------------------- #
 # Bitpacked layout: pack the trailing (column) axis, 32 columns per word.
 # ---------------------------------------------------------------------- #

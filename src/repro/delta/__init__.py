@@ -1,0 +1,24 @@
+"""Incremental-update subsystem: delta-edge ingestion with row-level
+closure repair (see DELTA.md).
+
+Layers:
+  * mutation   — ``core/graph.py``: ``insert_edges`` / ``delete_edges``
+    append to an edge log under a monotone version counter;
+  * repair     — ``repair.py`` (+ the reverse-reachability sweep in
+    ``core/closure.py``): turns a version range into row-level surgery on a
+    materialized masked-closure state instead of dropping it;
+  * serving    — ``txn.py`` + ``engine/service.py``: ``apply_delta`` on the
+    query engine, epoch-tagged snapshots, repair stats in query results.
+"""
+from .repair import DeltaStats, RepairPlan, plan_repair, reverse_reach_rows
+from .txn import EpochClock, Snapshot, StaleSnapshotError
+
+__all__ = [
+    "DeltaStats",
+    "EpochClock",
+    "RepairPlan",
+    "Snapshot",
+    "StaleSnapshotError",
+    "plan_repair",
+    "reverse_reach_rows",
+]

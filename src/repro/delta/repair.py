@@ -1,0 +1,208 @@
+"""Row-level repair of materialized masked-closure states.
+
+The engine caches, per grammar, a state ``(T, mask)`` where rows of ``T``
+listed in ``mask`` equal the all-pairs closure rows (core/closure.py).  An
+edge edit at source row ``u`` can only change closure rows ``i`` that can
+*reach* ``u`` through base edges (the contrapositive of the masked-closure
+dependency argument: row i is built entirely from rows reachable from i).
+This module turns an :class:`~repro.core.graph.EdgeDelta` into the minimal
+row surgery:
+
+insertions (monotone)
+    The cached ``T`` is a sound lower bound of the new closure, so the
+    repair *re-seeds* the masked fixpoint with the inserted edges' source
+    rows plus every cached-mask row that can reach one (ancestor set from a
+    reverse-reachability sweep), warm-starting from the cached state.  Rows
+    outside that ancestor set are untouched — their closure rows are
+    provably unchanged.
+
+deletions (non-monotone)
+    Rows that could reach a deleted edge's source may have lost entries;
+    they are conservatively *evicted*: reset to the new graph's base row
+    and dropped from the mask (they warm-recompute on next touch).  All
+    other rows provably never derived through the deleted edge and stay
+    exact.
+
+Correctness contract (tested bit-exactly in tests/test_delta.py): after
+repair, rows of ``T`` under ``mask`` are identical to the corresponding
+rows of a from-scratch closure on the mutated graph.
+
+Both sweeps run on the *union* of the pre- and post-delta edge sets (the
+current edges plus the deleted ones) — a sound over-approximation of either
+graph's reachability, so one adjacency serves both directions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import EdgeDelta, Graph
+
+
+@dataclass
+class DeltaStats:
+    """Repair counters, surfaced through ``QueryResult.stats``.
+
+    ``rows_repaired`` counts rows whose exactness the repair fixpoint
+    (re-)established, ``rows_evicted`` cached rows dropped to base by a
+    deletion, ``repair_iters`` closure-executable invocations (including
+    capacity-overflow re-entries).
+    """
+
+    rows_repaired: int = 0
+    rows_evicted: int = 0
+    repair_iters: int = 0
+
+    def merge(self, other: "DeltaStats") -> None:
+        self.rows_repaired += other.rows_repaired
+        self.rows_evicted += other.rows_evicted
+        self.repair_iters += other.repair_iters
+
+    def as_dict(self) -> dict:
+        return {
+            "rows_repaired": self.rows_repaired,
+            "rows_evicted": self.rows_evicted,
+            "repair_iters": self.repair_iters,
+        }
+
+
+@dataclass(frozen=True)
+class RepairPlan:
+    """Row masks (padded length n) driving the state surgery.
+
+    ``evict``: ancestors of deleted-edge sources — lose exactness.
+    ``affected``: ancestors of inserted-edge sources — need re-closure.
+    ``ins_sources``: inserted-edge source rows — their base entries grew.
+    """
+
+    evict: np.ndarray
+    affected: np.ndarray
+    ins_sources: np.ndarray
+
+    @property
+    def touches_anything(self) -> bool:
+        return bool(
+            self.evict.any() or self.affected.any() or self.ins_sources.any()
+        )
+
+
+def _reverse_adjacency(edges) -> dict[int, list[int]]:
+    radj: dict[int, list[int]] = {}
+    for i, _, j in edges:
+        radj.setdefault(j, []).append(i)
+    return radj
+
+
+def reverse_reach_rows(
+    n: int, edges, seeds, pad_to: int | None = None, radj=None
+) -> np.ndarray:
+    """Rows that can reach a seed row (seeds included): label-blind reverse
+    BFS over the edge list, O(V + E) host work.  Pass a prebuilt ``radj``
+    (:func:`_reverse_adjacency`) to amortize the edge walk over several
+    sweeps.  The device analog (for edge lists too large to walk in
+    Python) is ``core.closure.reverse_reachable_mask``."""
+    size = pad_to if pad_to is not None else n
+    mask = np.zeros(size, dtype=bool)
+    seeds = [s for s in set(seeds) if 0 <= s < n]
+    if not seeds:
+        return mask
+    if radj is None:
+        radj = _reverse_adjacency(edges)
+    stack = list(seeds)
+    mask[seeds] = True
+    while stack:
+        v = stack.pop()
+        for u in radj.get(v, ()):
+            if not mask[u]:
+                mask[u] = True
+                stack.append(u)
+    return mask
+
+
+def plan_repair(graph: Graph, delta: EdgeDelta, pad_to: int) -> RepairPlan:
+    """Build the row surgery plan for ``delta`` against the mutated
+    ``graph`` (whose ``edges`` are already post-delta)."""
+    union_edges = list(graph.edges) + list(delta.deleted)
+    n = graph.n_nodes
+    radj = (
+        _reverse_adjacency(union_edges)
+        if (delta.deleted_sources or delta.inserted_sources)
+        else None
+    )
+    evict = reverse_reach_rows(
+        n, union_edges, delta.deleted_sources, pad_to=pad_to, radj=radj
+    )
+    affected = reverse_reach_rows(
+        n, union_edges, delta.inserted_sources, pad_to=pad_to, radj=radj
+    )
+    ins_sources = np.zeros(pad_to, dtype=bool)
+    src = [u for u in delta.inserted_sources if u < n]
+    if src:
+        ins_sources[src] = True
+    return RepairPlan(evict, affected, ins_sources)
+
+
+def repair_state(
+    T_host: np.ndarray,
+    T_dev,
+    mask: np.ndarray,
+    plan: RepairPlan,
+    base_rows_fn,
+    run_closure,
+) -> tuple[np.ndarray, object, np.ndarray, DeltaStats]:
+    """Apply ``plan`` to one grammar's cached state.
+
+    ``T_host`` / ``T_dev`` are the host view and device copy of the cached
+    closure; only the rows the plan touches are rebuilt and transferred —
+    never the whole matrix.  ``base_rows_fn(idx) -> (|N|, len(idx), n)``
+    returns the mutated graph's base-matrix rows for a row subset;
+    ``run_closure(T_dev, seed_mask, frozen_mask) -> (T_dev', M', n_calls)``
+    runs the repair fixpoint to completion (handling capacity overflow).
+    Both are supplied by the engine so repair stays agnostic of plan
+    caches and backends.  Rows under ``frozen_mask`` are exact on the
+    mutated graph and are contracted against but never recomputed.
+
+    Returns ``(T_host, T_dev, mask, stats)``; every returned row under
+    ``mask`` equals the from-scratch closure row on the mutated graph.
+    """
+    stats = DeltaStats()
+    mask = np.array(mask, copy=True)
+
+    # 1. base surgery on just the touched rows: grow inserted sources'
+    #    base rows, reset evicted rows to the new base (cached entries
+    #    above them may derive through a deleted edge; base-only is the
+    #    sound floor to rebuild from).  The patch is composed host-side
+    #    and scattered into the device copy — a rows-sized transfer.
+    touched = plan.evict | plan.ins_sources
+    dirty = False
+    if touched.any():
+        idx = np.nonzero(touched)[0]
+        rows = base_rows_fn(idx)
+        ev = plan.evict[idx][None, :, None]  # evicted reset; inserts grow
+        patch = np.where(ev, rows, T_host[:, idx, :] | rows)
+        stats.rows_evicted = int((mask & plan.evict).sum())
+        mask &= ~plan.evict
+        jidx = jnp.asarray(idx.astype(np.int32))
+        T_dev = T_dev.at[:, jidx, :].set(jnp.asarray(patch))
+        dirty = True
+
+    # 2. insertion repair: warm-start the monotone fixpoint from the cached
+    #    state, seeded with the inserted sources plus every still-cached
+    #    ancestor row.  Cached rows outside the ancestor set are FROZEN —
+    #    provably unchanged by the delta, contracted against as constants,
+    #    never recomputed (and returned bit-identical).
+    seed = (plan.affected & mask) | plan.ins_sources
+    frozen = mask & ~plan.affected
+    if seed.any():
+        T_dev, M, calls = run_closure(T_dev, seed, frozen)
+        M = np.asarray(M)
+        stats.rows_repaired = int(M.sum())
+        stats.repair_iters = calls
+        # seed ⊆ M, so previously-exact affected rows are re-validated
+        mask |= M
+        dirty = True
+    if dirty:
+        T_host = np.asarray(T_dev)  # zero-copy view on the CPU backend
+    return T_host, T_dev, mask, stats

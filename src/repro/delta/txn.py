@@ -1,0 +1,54 @@
+"""Epoch-tagged snapshot consistency for the serving layer.
+
+Every committed delta advances the engine's *epoch* (graph versions may
+advance by more than one per epoch when a delta batch coalesces several
+log entries).  Results carry the epoch they were served under, and a
+:class:`Snapshot` pins an epoch: a batch holding a snapshot from before a
+delta fails loudly with :class:`StaleSnapshotError` instead of silently
+mixing rows from two graph versions.  The engine is single-writer — the
+guard exists so callers that cache a snapshot across batches (an async
+admission queue, a long-running cursor) get a consistency error rather
+than stale pairs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class StaleSnapshotError(RuntimeError):
+    """The graph advanced past the snapshot's epoch."""
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """A pinned (epoch, graph version) pair."""
+
+    epoch: int
+    version: int
+
+
+@dataclass
+class EpochClock:
+    """Monotone epoch counter tied to the graph version it serves."""
+
+    epoch: int = 0
+    version: int = 0
+
+    def advance(self, version: int) -> int:
+        """Commit a delta: one epoch per observed version jump."""
+        self.epoch += 1
+        self.version = version
+        return self.epoch
+
+    def snapshot(self) -> Snapshot:
+        return Snapshot(self.epoch, self.version)
+
+    def validate(self, snap: Snapshot | None) -> None:
+        if snap is None:
+            return
+        if snap.epoch != self.epoch or snap.version != self.version:
+            raise StaleSnapshotError(
+                f"snapshot pinned epoch {snap.epoch} (graph v{snap.version}) "
+                f"but the engine is at epoch {self.epoch} "
+                f"(graph v{self.version})"
+            )

@@ -4,15 +4,21 @@
 masked-closure call each and caches both compiled executables (plan.py)
 and materialized closure rows (service.py).
 """
+from repro.delta.repair import DeltaStats
+from repro.delta.txn import Snapshot, StaleSnapshotError
+
 from .plan import CompiledClosureCache, PlanKey, bucket_for, row_buckets
 from .service import Query, QueryEngine, QueryResult, grammar_key
 
 __all__ = [
     "CompiledClosureCache",
+    "DeltaStats",
     "PlanKey",
     "Query",
     "QueryEngine",
     "QueryResult",
+    "Snapshot",
+    "StaleSnapshotError",
     "bucket_for",
     "grammar_key",
     "row_buckets",

@@ -28,6 +28,15 @@ MASKED_ENGINES = {
     "bitpacked": _closure.masked_bitpacked_closure,
 }
 
+#: repair closure per backend — delta ingestion (frozen-row warm restart;
+#: the frontier backend shares the dense repair path: repair iterations are
+#: already delta-shaped, there is no second frontier to exploit).
+REPAIR_ENGINES = {
+    "dense": _closure.masked_repair_closure,
+    "frontier": _closure.masked_repair_closure,
+    "bitpacked": _closure.masked_bitpacked_repair_closure,
+}
+
 
 def row_buckets(n: int) -> list[int]:
     """Allowed row capacities for padded size n: 128, 256, ... , n."""
@@ -50,12 +59,21 @@ def bucket_for(n_rows: int, n: int) -> int:
 
 @dataclass(frozen=True)
 class PlanKey:
-    """Everything that determines a compiled closure executable."""
+    """Everything that determines a compiled closure executable.
+
+    ``repair`` selects the delta-repair variant: same backend, but the
+    executable takes an extra frozen-row mask and signature
+    ``(T, src_mask, frozen_mask) -> (T, mask, overflow)``.
+    ``ctx_capacity`` is the repair contraction-context bucket (active plus
+    frozen rows) on the dense/frontier backends; 0 when unused.
+    """
 
     tables: ProductionTables
     engine: str
     n: int  # padded matrix size
     row_capacity: int
+    repair: bool = False
+    ctx_capacity: int = 0
 
 
 @dataclass
@@ -95,11 +113,17 @@ class CompiledClosureCache:
         return exe
 
     def _build(self, key: PlanKey):
-        fn = MASKED_ENGINES[key.engine]
         T = jax.ShapeDtypeStruct(
             (key.tables.n_nonterms, key.n, key.n), jnp.bool_
         )
         m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
+        if key.repair:
+            fn = REPAIR_ENGINES[key.engine]
+            kw = {"row_capacity": key.row_capacity}
+            if key.ctx_capacity:  # dense/frontier compact the contraction
+                kw["ctx_capacity"] = key.ctx_capacity
+            return fn.lower(T, key.tables, m, m, **kw).compile()
+        fn = MASKED_ENGINES[key.engine]
         return fn.lower(
             T, key.tables, m, row_capacity=key.row_capacity
         ).compile()

@@ -14,9 +14,15 @@ Cache states reported per request:
   ``warm``  the masked closure ran, seeded from previous state;
   ``miss``  first closure for this (graph, grammar).
 
-The graph is fingerprinted on every batch; edge changes drop the
-materialized states (compiled executables survive — they depend only on
-the grammar and padded size, not on the data).
+Graph edits committed through ``Graph.insert_edges`` / ``delete_edges`` (or
+``QueryEngine.apply_delta``) advance the graph's version counter and are
+ingested as *row-level repair* of the materialized states (delta/repair.py)
+instead of dropping them; each ingested delta advances the engine epoch
+(delta/txn.py).  Out-of-band edits (mutating ``graph.edges`` directly) are
+still caught by a per-batch edge-set comparison — even when they coincide
+with logged edits — and fall back to dropping every materialized state.
+Compiled executables survive both paths — they depend only on the grammar
+and padded size, not on the data.
 """
 from __future__ import annotations
 
@@ -28,8 +34,15 @@ import numpy as np
 
 from repro.core.grammar import CNFGrammar
 from repro.core.graph import Graph
-from repro.core.matrices import ProductionTables, init_matrix, padded_size
+from repro.core.matrices import (
+    ProductionTables,
+    init_matrix,
+    init_matrix_rows,
+    padded_size,
+)
 from repro.core.semantics import extract_path, single_path_closure
+from repro.delta.repair import DeltaStats, plan_repair, repair_state
+from repro.delta.txn import EpochClock, Snapshot
 
 from .plan import MASKED_ENGINES, CompiledClosureCache, PlanKey, bucket_for
 
@@ -99,15 +112,27 @@ class QueryEngine:
         self.row_capacity = row_capacity
         self.n = padded_size(graph.n_nodes)
         self._states: dict[tuple, _GrammarState] = {}
-        self._fingerprint = self._graph_fingerprint()
+        self._edge_set = frozenset(graph.edges)  # content served last
+        self._n_nodes = graph.n_nodes
+        self._version = graph.version
+        self.clock = EpochClock(version=graph.version)
+        self.delta_stats = DeltaStats()  # cumulative over the engine's life
 
     # ------------------------------------------------------------------ #
-    def query(self, q: Query) -> QueryResult:
-        return self.query_batch([q])[0]
+    def query(self, q: Query, snapshot: Snapshot | None = None) -> QueryResult:
+        return self.query_batch([q], snapshot=snapshot)[0]
 
-    def query_batch(self, queries: list[Query]) -> list[QueryResult]:
-        """Serve a batch: one closure call per (grammar, semantics) group."""
+    def query_batch(
+        self, queries: list[Query], snapshot: Snapshot | None = None
+    ) -> list[QueryResult]:
+        """Serve a batch: one closure call per (grammar, semantics) group.
+
+        ``snapshot`` (from :meth:`snapshot`) pins the epoch the caller
+        expects to read; if a delta was committed since, the batch raises
+        ``StaleSnapshotError`` instead of serving rows of a newer graph.
+        """
         self._check_graph()
+        self.clock.validate(snapshot)
         results: list[QueryResult | None] = [None] * len(queries)
         groups: dict[tuple, list[int]] = {}
         for qi, q in enumerate(queries):
@@ -129,15 +154,96 @@ class QueryEngine:
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
-    def _graph_fingerprint(self) -> int:
-        return hash((self.graph.n_nodes, tuple(self.graph.edges)))
+    # Delta ingestion (serving layer of the delta subsystem; DELTA.md).
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> Snapshot:
+        """Pin the current epoch for cross-batch read consistency."""
+        return self.clock.snapshot()
 
+    def apply_delta(
+        self,
+        insert: list[tuple[int, str, int]] = (),
+        delete: list[tuple[int, str, int]] = (),
+    ) -> DeltaStats:
+        """Commit edge edits and repair materialized closures in place.
+
+        Deletions are applied first, then insertions; both are folded into
+        one repair pass.  Returns this delta's repair stats (the engine
+        also accumulates them into every result's stats).
+        """
+        self._check_graph()  # settle pending/out-of-band edits first
+        if delete:
+            self.graph.delete_edges(list(delete))
+        if insert:
+            self.graph.insert_edges(list(insert))
+        if self.graph.version == self._version:
+            return DeltaStats()  # edits were all no-ops
+        return self._ingest_delta()
+
+    def _ingest_delta(self, delta=None) -> DeltaStats:
+        """Fold the graph's edge log since the last-served version into
+        row-level repair of every cached grammar state."""
+        g = self.graph
+        if delta is None:
+            delta = g.delta_since(self._version)
+        stats = DeltaStats()
+        if delta:
+            plan = plan_repair(g, delta, self.n)
+            for state in self._states.values():
+                state.sp = None  # single-path states are dropped, not repaired
+                if state.T is None or state.mask is None:
+                    continue
+                T_np = (
+                    state.T_host
+                    if state.T_host is not None
+                    else np.asarray(state.T)
+                )
+
+                def base_rows(idx, grammar=state.grammar):
+                    return init_matrix_rows(g, grammar, idx, pad_to=self.n)
+
+                def run(T_dev, seed, frozen, tables=state.tables):
+                    return self._run_fixpoint(tables, T_dev, seed, frozen)
+
+                T_host, T_dev, mask_new, st = repair_state(
+                    T_np, state.T, np.asarray(state.mask), plan,
+                    base_rows, run,
+                )
+                state.T = T_dev
+                state.T_host = T_host
+                state.mask = mask_new
+                stats.merge(st)
+        self._version = g.version
+        self._edge_set = frozenset(g.edges)
+        self.delta_stats.merge(stats)
+        self.clock.advance(g.version)
+        return stats
+
+    # ------------------------------------------------------------------ #
     def _check_graph(self) -> None:
-        fp = self._graph_fingerprint()
-        if fp != self._fingerprint:  # graph edited: closures are stale
-            self._states.clear()
-            self._fingerprint = fp
-            self.n = padded_size(self.graph.n_nodes)
+        """Reconcile with the graph: logged edits repair row-wise; any edit
+        the log cannot account for (``graph.edges`` touched directly) drops
+        every materialized state.  The repair path is taken only when the
+        current edge set is exactly the last-served set transformed by the
+        log — an out-of-band edit concurrent with logged edits therefore
+        still forces full invalidation instead of being masked."""
+        g = self.graph
+        actual = frozenset(g.edges)
+        if g.version != self._version:
+            delta = g.delta_since(self._version)
+            expected = (
+                self._edge_set | set(delta.inserted)
+            ) - set(delta.deleted)
+            if g.n_nodes == self._n_nodes and actual == expected:
+                self._ingest_delta(delta)
+                return
+        if actual != self._edge_set or g.n_nodes != self._n_nodes:
+            self._states.clear()  # out-of-band edit: full invalidation
+            self._edge_set = actual
+            self._n_nodes = g.n_nodes
+            self._version = g.version
+            self.n = padded_size(g.n_nodes)
+            self.clock.advance(g.version)
 
     def _state_for(self, gkey: tuple, g: CNFGrammar) -> _GrammarState:
         state = self._states.get(gkey)
@@ -161,6 +267,59 @@ class QueryEngine:
             need[list(q.sources)] = True
         return need
 
+    def _run_fixpoint(
+        self,
+        tables: ProductionTables,
+        T,
+        seed: np.ndarray,
+        frozen: np.ndarray | None = None,
+    ):
+        """Run the masked closure to completion from ``seed`` rows, growing
+        the capacity bucket on overflow (monotone warm restarts, so no work
+        is lost).  With ``frozen`` (delta repair) the run uses the repair
+        variant: frozen rows are contracted against but never recomputed,
+        so capacity tracks the edit's blast radius, not the cache size.
+        Returns ``(T_device, M_host, n_calls)``."""
+        mask = np.asarray(seed)
+        repair = frozen is not None
+        n_frozen = 0
+        cap_c = 0
+        if repair:
+            frozen_dev = jnp.asarray(frozen)
+            n_frozen = int(np.asarray(frozen).sum())
+        cap = bucket_for(max(self.row_capacity, int(mask.sum())), self.n)
+        if repair and self.engine != "bitpacked":
+            # dense/frontier compact the contraction axis over active +
+            # frozen rows; bitpacked contracts full packed words instead
+            cap_c = bucket_for(max(cap, int(mask.sum()) + n_frozen), self.n)
+        calls = 0
+        while True:
+            exe = self.plans.get(
+                PlanKey(
+                    tables,
+                    self.engine,
+                    self.n,
+                    cap,
+                    repair=repair,
+                    ctx_capacity=cap_c,
+                )
+            )
+            if repair:
+                T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)
+            else:
+                T, M, overflow = exe(T, jnp.asarray(mask))
+            calls += 1
+            if not bool(overflow):
+                break
+            mask = np.asarray(M)  # monotone warm restart, larger capacity
+            grown = int(mask.sum())
+            # overflow implies the active set outgrew cap or (repair) the
+            # context outgrew cap_c, so at least one bucket grows strictly
+            cap = bucket_for(max(cap, grown), self.n)
+            if cap_c:
+                cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
+        return T, np.asarray(M), calls
+
     def _ensure_rows(self, state: _GrammarState, batch: list[Query]) -> str:
         """Materialize closure rows covering the batch; returns cache state."""
         need = self._need_mask(batch)
@@ -173,23 +332,12 @@ class QueryEngine:
         if state.T is None:
             state.T = init_matrix(self.graph, state.grammar, pad_to=self.n)
             state.mask = np.zeros(self.n, dtype=bool)
-        mask = np.asarray(state.mask) | need
-        T = state.T
-        cap = bucket_for(
-            max(self.row_capacity, int(mask.sum())), self.n
+        T, M, _ = self._run_fixpoint(
+            state.tables, state.T, np.asarray(state.mask) | need
         )
-        while True:
-            exe = self.plans.get(
-                PlanKey(state.tables, self.engine, self.n, cap)
-            )
-            T, M, overflow = exe(T, jnp.asarray(mask))
-            if not bool(overflow):
-                break
-            mask = np.asarray(M)  # monotone warm restart, larger capacity
-            cap = bucket_for(max(cap * 2, int(mask.sum())), self.n)
         state.T = T
         state.T_host = np.asarray(T)
-        state.mask = np.asarray(M)
+        state.mask = M
         return status
 
     def _serve_relational(
@@ -206,6 +354,8 @@ class QueryEngine:
             "engine": self.engine,
             "batched_with": len(batch),
             "active_rows": int(state.mask.sum()),
+            "epoch": self.clock.epoch,
+            **self.delta_stats.as_dict(),
             **self.plans.stats.as_dict(),
         }
         outs = []
@@ -239,6 +389,7 @@ class QueryEngine:
             "cache": status,
             "engine": "single_path",
             "batched_with": len(batch),
+            "epoch": self.clock.epoch,
         }
         outs = []
         for q in batch:

@@ -42,8 +42,19 @@ def _wsc(x, spec):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
-def moe_apply(p, x: jnp.ndarray, m: MoEConfig, plan=None):
-    """x: (T, d) -> (y: (T, d), aux_loss: scalar)."""
+def moe_apply(p, x: jnp.ndarray, m: MoEConfig, plan=None, drop_tokens=True):
+    """x: (T, d) -> (y: (T, d), aux_loss: scalar).
+
+    ``drop_tokens`` selects the capacity policy.  True (training): tokens
+    beyond an expert's capacity are dropped — the standard Switch scheme,
+    but each token's output then depends on every other token in the batch
+    (capacity slots are claimed in flat token order, which is not even
+    causal across batch rows).  False (inference): capacity covers the
+    worst case so no token is ever dropped and each token's output is a
+    function of that token alone — required for decode to reproduce
+    prefill logits.  Dropless dispatch buffers hold T*k rows per expert,
+    so large-batch prefill should keep the capacity path.
+    """
     from jax.sharding import PartitionSpec as P
 
     T, d = x.shape
@@ -70,8 +81,11 @@ def moe_apply(p, x: jnp.ndarray, m: MoEConfig, plan=None):
     aux = E * jnp.sum(density * router_frac)
 
     # ---- grouped dispatch: every op below is per-group (row-local) ----
-    cap = int(Tg * k / E * m.capacity_factor)
-    cap = max(4, -(-cap // 4) * 4)
+    if drop_tokens:
+        cap = int(Tg * k / E * m.capacity_factor)
+        cap = max(4, -(-cap // 4) * 4)
+    else:
+        cap = Tg * k  # worst case: every assignment lands on one expert
     xg = x.reshape(G, Tg, d)
     xg = _wsc(xg, P(g_axis, None, None)) if plan else xg
     flat_e = expert_idx.reshape(G, Tg * k)

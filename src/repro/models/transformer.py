@@ -228,14 +228,14 @@ def _dense_ffn(p, x, cfg):
     return x + act @ p["down"].astype(dt)
 
 
-def _moe_sublayer(p, norm_scale, x, cfg, plan=None):
+def _moe_sublayer(p, norm_scale, x, cfg, plan=None, drop_tokens=True):
     B, S, d = x.shape
     h = rms_norm(x, norm_scale, cfg.norm_eps)
-    y, aux = moe_apply(p, h.reshape(B * S, d), cfg.moe, plan)
+    y, aux = moe_apply(p, h.reshape(B * S, d), cfg.moe, plan, drop_tokens)
     return x + y.reshape(B, S, d), aux
 
 
-def apply_block(bp, x, cfg: TransformerConfig, plan=None):
+def apply_block(bp, x, cfg: TransformerConfig, plan=None, drop_tokens=True):
     """One block of ``e`` layers: attn (+dense FFN) x (e-1), then attn +
     (MoE | dense) FFN.  Shared by the train scan and the roofline
     component cells.  The local/global pattern repeats per block, so the
@@ -249,7 +249,9 @@ def apply_block(bp, x, cfg: TransformerConfig, plan=None):
             d_i = jax.tree.map(lambda a: a[i], bp["dense_ffn"])
             x = _dense_ffn(d_i, x, cfg)
     if cfg.moe:
-        x, aux = _moe_sublayer(bp["moe"], bp["moe_norm"], x, cfg, plan)
+        x, aux = _moe_sublayer(
+            bp["moe"], bp["moe_norm"], x, cfg, plan, drop_tokens
+        )
     else:
         x = _dense_ffn(bp["last_ffn"], x, cfg)
     if plan is not None:
@@ -285,10 +287,16 @@ def forward(
     cfg: TransformerConfig,
     plan: MeshPlan | None = None,
     last_only: bool = False,
+    drop_tokens: bool = False,
 ):
     """tokens (B, S) int32 -> logits (B, S, vocab) f32 (or (B, 1, vocab)
     when ``last_only`` — the prefill path must never materialize the full
-    (B, S, vocab) logits tensor)."""
+    (B, S, vocab) logits tensor).
+
+    ``drop_tokens`` defaults to False (dropless MoE): teacher-forced
+    evaluation logits are then batch-independent and bit-comparable to
+    token-by-token decode.  The train loss and large-batch prefill opt
+    back into capacity drops (see moe_apply)."""
     n_blocks, e = _block_counts(cfg)
     dt = _act_dtype(cfg)
     x = params["embed"].astype(dt)[tokens] * jnp.asarray(
@@ -298,7 +306,7 @@ def forward(
         x = jax.lax.with_sharding_constraint(x, _x_spec(cfg, plan))
 
     def block_fn(x, bp):
-        x, a = apply_block(bp, x, cfg, plan)
+        x, a = apply_block(bp, x, cfg, plan, drop_tokens)
         return x, a  # aux flows through ys: keeps the scan carry pure-bf16
 
     block_fn = jax.checkpoint(
@@ -317,13 +325,17 @@ def forward(
 
 
 def prefill_step(params, tokens, cfg: TransformerConfig, plan=None):
-    """Serving prefill: full-sequence forward, last-token logits (B, vocab)."""
-    logits, _ = forward(params, tokens, cfg, plan, last_only=True)
+    """Serving prefill: full-sequence forward, last-token logits (B, vocab).
+
+    Keeps capacity-drop dispatch: prefill batches are large and the
+    dropless buffers would be n_experts x bigger; the dry-run memory plans
+    assume the capacity path."""
+    logits, _ = forward(params, tokens, cfg, plan, last_only=True, drop_tokens=True)
     return logits[:, 0]
 
 
 def loss_fn(params, batch, cfg: TransformerConfig, plan: MeshPlan | None = None):
-    logits, aux = forward(params, batch["tokens"], cfg, plan)
+    logits, aux = forward(params, batch["tokens"], cfg, plan, drop_tokens=True)
     targets = batch["targets"]
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
@@ -404,7 +416,10 @@ def serve_step(params, cache, tokens, pos, cfg: TransformerConfig):
             d_i = jax.tree.map(lambda a: a[i], bp["dense_ffn"])
             x = _dense_ffn(d_i, x, cfg)
         elif cfg.moe:
-            x, _ = _moe_sublayer(bp["moe"], bp["moe_norm"], x, cfg)
+            # dropless: a decode step must never lose a token to capacity
+            x, _ = _moe_sublayer(
+                bp["moe"], bp["moe_norm"], x, cfg, drop_tokens=False
+            )
         else:
             x = _dense_ffn(bp["last_ffn"], x, cfg)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,314 @@
+"""Delta subsystem: edge-log mutation layer, row-level closure repair,
+epoch-snapshot consistency.
+
+The load-bearing test is the differential one: a random interleaving of
+inserts / deletes / queries against one long-lived engine must match a
+from-scratch engine on the same graph at every step, for all three masked
+backends — plus the bit-identical repair contract on the cached state
+itself.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import closure
+from repro.core.grammar import Grammar, query1_grammar
+from repro.core.graph import Graph, ontology_graph, random_labeled_graph
+from repro.core.matrices import (
+    ProductionTables,
+    init_matrix,
+    init_matrix_rows,
+)
+from repro.core.semantics import evaluate_relational
+from repro.delta.repair import reverse_reach_rows
+from repro.delta.txn import EpochClock, Snapshot, StaleSnapshotError
+from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine.plan import MASKED_ENGINES
+
+ENGINES = sorted(MASKED_ENGINES)
+
+
+# ---------------------------------------------------------------------- #
+# Mutation layer (core/graph.py)
+# ---------------------------------------------------------------------- #
+
+
+def test_edge_log_versions_and_net_delta():
+    g = Graph(4, [(0, "a", 1), (1, "b", 2)])
+    assert g.version == 0
+    v0 = g.version
+    g.insert_edges([(2, "a", 3)])
+    assert g.version == 1 and (2, "a", 3) in g.edges
+    g.insert_edges([(2, "a", 3)])  # duplicate: no-op, no version bump
+    assert g.version == 1
+    g.delete_edges([(0, "a", 1)])
+    assert g.version == 2 and (0, "a", 1) not in g.edges
+    g.delete_edges([(0, "a", 1)])  # absent: no-op
+    assert g.version == 2
+    d = g.delta_since(v0)
+    assert set(d.inserted) == {(2, "a", 3)}
+    assert set(d.deleted) == {(0, "a", 1)}
+    assert d.inserted_sources == {2} and d.deleted_sources == {0}
+
+
+def test_edge_log_cancellation():
+    g = Graph(3, [(0, "a", 1)])
+    v0 = g.version
+    g.insert_edges([(1, "a", 2)])
+    g.delete_edges([(1, "a", 2)])  # insert then delete: net no-op
+    g.delete_edges([(0, "a", 1)])
+    g.insert_edges([(0, "a", 1)])  # delete then re-insert: net no-op
+    d = g.delta_since(v0)
+    assert not d and d.inserted == () and d.deleted == ()
+    # a consumer at an intermediate version still sees the tail
+    d1 = g.delta_since(v0 + 1)
+    assert set(d1.deleted) == {(1, "a", 2)}
+
+
+def test_edge_mutation_validates_nodes():
+    g = Graph(2, [])
+    with pytest.raises(ValueError):
+        g.insert_edges([(0, "a", 5)])
+    with pytest.raises(ValueError):
+        g.delete_edges([(-1, "a", 0)])
+    with pytest.raises(ValueError):
+        g.delta_since(99)
+
+
+def test_delete_removes_duplicate_occurrences():
+    g = Graph(2, [(0, "a", 1), (0, "a", 1)])
+    g.delete_edges([(0, "a", 1)])
+    assert (0, "a", 1) not in g.edges and g.n_edges == 0
+
+
+def test_init_matrix_rows_matches_full_matrix_slices():
+    graph = ontology_graph(20, 40, seed=9)
+    g = query1_grammar().to_cnf()
+    full = np.asarray(init_matrix(graph, g))
+    idx = np.array([0, 3, 17, graph.n_nodes - 1])
+    rows = init_matrix_rows(graph, g, idx, pad_to=full.shape[-1])
+    np.testing.assert_array_equal(rows, full[:, idx, :])
+
+
+# ---------------------------------------------------------------------- #
+# Reverse-reachability sweeps (host BFS vs device fixpoint)
+# ---------------------------------------------------------------------- #
+
+
+def test_reverse_reach_host_matches_device_sweep():
+    rng = np.random.default_rng(3)
+    n = 60
+    graph = random_labeled_graph(n, 150, ["a", "b"], seed=3)
+    adj = np.zeros((n, n), dtype=bool)
+    for i, _, j in graph.edges:
+        adj[i, j] = True
+    for seeds in [(0,), (5, 17), tuple(rng.integers(0, n, size=6).tolist())]:
+        host = reverse_reach_rows(n, graph.edges, seeds)
+        seed_m = np.zeros(n, dtype=bool)
+        seed_m[list(seeds)] = True
+        dev = np.asarray(
+            closure.reverse_reachable_mask(
+                jnp.asarray(adj), jnp.asarray(seed_m)
+            )
+        )
+        np.testing.assert_array_equal(host, dev)
+    # empty seeds -> empty mask
+    assert not reverse_reach_rows(n, graph.edges, ()).any()
+
+
+# ---------------------------------------------------------------------- #
+# Repair correctness through the service
+# ---------------------------------------------------------------------- #
+
+
+def _pairs_for(graph, g, sources):
+    full = evaluate_relational(graph, g, "S")
+    return {(i, j) for (i, j) in full if i in sources}
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_insert_repair_matches_scratch(engine):
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=1)
+    eng = QueryEngine(graph, engine=engine)
+    src = (0, 3, 7)
+    eng.query(Query(g, "S", sources=src))
+    st = eng.apply_delta(
+        insert=[(0, "type", 5), (5, "subClassOf", 3), (9, "type_r", 2)]
+    )
+    assert st.rows_repaired > 0 and st.repair_iters >= 1
+    r = eng.query(Query(g, "S", sources=src))
+    assert r.stats["cache"] == "hit"  # repaired eagerly, not dropped
+    assert r.pairs == _pairs_for(graph, g, src)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_delete_evicts_and_recomputes(engine):
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=1)
+    eng = QueryEngine(graph, engine=engine)
+    src = (0, 3, 7)
+    eng.query(Query(g, "S", sources=src))
+    victim = graph.edges[0]
+    st = eng.apply_delta(delete=[victim])
+    assert st.rows_evicted > 0
+    r = eng.query(Query(g, "S", sources=src))
+    assert r.stats["cache"] in ("warm", "hit")  # hit iff no src was evicted
+    assert r.pairs == _pairs_for(graph, g, src)
+
+
+def test_repair_contract_rows_bit_identical_to_scratch():
+    """After repair, every row under the cached mask equals the same row of
+    a from-scratch all-pairs closure on the mutated graph — the DELTA.md
+    correctness contract, checked on the raw state."""
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=2)
+    eng = QueryEngine(graph, engine="dense")
+    eng.query(Query(g, "S", sources=(0, 5)))
+    eng.apply_delta(
+        insert=[(1, "subClassOf", 4), (8, "type", 3)],
+        delete=[graph.edges[3]],
+    )
+    (state,) = eng._states.values()
+    tables = ProductionTables.from_grammar(g)
+    T_ref = np.asarray(
+        closure.dense_closure(init_matrix(graph, g, pad_to=eng.n), tables)
+    )
+    M = state.mask
+    assert M.any()
+    np.testing.assert_array_equal(state.T_host[:, M, :], T_ref[:, M, :])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_differential_random_interleaving(engine):
+    """Acceptance: a random interleaving of inserts/deletes/queries on one
+    long-lived engine yields pair sets identical to a from-scratch engine
+    on the current graph, at every step."""
+    rng = np.random.default_rng(ENGINES.index(engine))  # reproducible
+    g = Grammar.from_text("S -> a S b | a b").to_cnf()
+    n = 24
+    graph = random_labeled_graph(n, 50, ["a", "b"], seed=7)
+    graph.edges[:] = sorted(set(graph.edges))  # dedup for clean deletes
+    eng = QueryEngine(graph, engine=engine)
+    plans = CompiledClosureCache()  # shared by the scratch references
+
+    def random_edge():
+        return (
+            int(rng.integers(0, n)),
+            ["a", "b"][int(rng.integers(0, 2))],
+            int(rng.integers(0, n)),
+        )
+
+    for step in range(12):
+        op = rng.random()
+        if op < 0.35 and graph.edges:
+            victim = graph.edges[int(rng.integers(0, len(graph.edges)))]
+            eng.apply_delta(delete=[victim])
+        elif op < 0.7:
+            eng.apply_delta(insert=[random_edge() for _ in range(2)])
+        sources = tuple(
+            sorted(set(int(s) for s in rng.integers(0, n, size=3)))
+        )
+        got = eng.query(Query(g, "S", sources=sources))
+        scratch = QueryEngine(
+            Graph(n, list(graph.edges)), engine=engine, plans=plans
+        )
+        want = scratch.query(Query(g, "S", sources=sources))
+        assert got.pairs == want.pairs, (engine, step, sources)
+
+
+# ---------------------------------------------------------------------- #
+# Epoch snapshots (delta/txn.py)
+# ---------------------------------------------------------------------- #
+
+
+def test_epoch_clock_unit():
+    clock = EpochClock(version=5)
+    snap = clock.snapshot()
+    clock.validate(snap)
+    clock.validate(None)
+    assert clock.advance(7) == 1
+    assert clock.snapshot() == Snapshot(1, 7)
+    with pytest.raises(StaleSnapshotError):
+        clock.validate(snap)
+
+
+def test_apply_delta_never_serves_stale_rows_under_snapshot():
+    """Acceptance: a batch pinned to a pre-delta snapshot errors instead of
+    returning stale rows, and post-delta queries always reflect the
+    mutated graph at the advanced epoch."""
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=4)
+    eng = QueryEngine(graph, engine="dense")
+    src = (0, 2)
+    r0 = eng.query(Query(g, "S", sources=src))
+    assert r0.stats["epoch"] == 0
+    snap = eng.snapshot()
+    eng.apply_delta(insert=[(0, "type", 9)])
+    with pytest.raises(StaleSnapshotError):
+        eng.query(Query(g, "S", sources=src), snapshot=snap)
+    r1 = eng.query(Query(g, "S", sources=src), snapshot=eng.snapshot())
+    assert r1.stats["epoch"] == 1
+    assert r1.pairs == _pairs_for(graph, g, src)
+    # a delta committed via the graph API (not apply_delta) is ingested at
+    # the next batch and also invalidates older snapshots
+    snap1 = eng.snapshot()
+    graph.insert_edges([(1, "type", 9)])
+    with pytest.raises(StaleSnapshotError):
+        eng.query(Query(g, "S", sources=src), snapshot=snap1)
+    r2 = eng.query(Query(g, "S", sources=src))
+    assert r2.stats["epoch"] == 2
+    assert r2.pairs == _pairs_for(graph, g, src)
+
+
+def test_out_of_band_edit_still_invalidates_and_advances_epoch():
+    graph = Graph(3, [(0, "a", 1)])
+    g = Grammar.from_text("S -> a").to_cnf()
+    eng = QueryEngine(graph)
+    snap = eng.snapshot()
+    assert eng.query(Query(g, "S", sources=(0,))).pairs == {(0, 1)}
+    graph.edges.append((0, "a", 2))  # bypasses the log entirely
+    r = eng.query(Query(g, "S", sources=(0,)))
+    assert r.stats["cache"] == "miss"  # full drop, legacy path
+    assert r.pairs == {(0, 1), (0, 2)}
+    with pytest.raises(StaleSnapshotError):
+        eng.query(Query(g, "S", sources=(0,)), snapshot=snap)
+
+
+def test_out_of_band_edit_concurrent_with_logged_edit_not_masked():
+    """Regression: an out-of-band edit arriving in the same window as a
+    logged edit must still force full invalidation — the repaired-in-place
+    cache would otherwise silently miss the unlogged edge."""
+    graph = Graph(8, [(0, "a", 1)])
+    g = Grammar.from_text("S -> a | b").to_cnf()
+    eng = QueryEngine(graph)
+    assert eng.query(Query(g, "S", sources=(5,))).pairs == set()
+    graph.edges.append((5, "a", 6))  # out-of-band
+    graph.insert_edges([(6, "b", 7)])  # logged, same window
+    r = eng.query(Query(g, "S", sources=(5, 6)))
+    assert r.stats["cache"] == "miss"  # full drop, not masked by repair
+    assert r.pairs == {(5, 6), (6, 7)}
+
+
+def test_delta_stats_surfaced_in_query_results():
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=5)
+    eng = QueryEngine(graph, engine="dense")
+    eng.query(Query(g, "S", sources=(0,)))
+    eng.apply_delta(insert=[(0, "type", 3)])
+    eng.apply_delta(delete=[graph.edges[0]])
+    stats = eng.query(Query(g, "S", sources=(0,))).stats
+    assert stats["rows_repaired"] > 0
+    assert stats["rows_evicted"] > 0
+    assert stats["repair_iters"] >= 1
+    assert stats["epoch"] == 2
+
+
+def test_noop_delta_does_not_advance_epoch_or_drop_cache():
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=6)
+    eng = QueryEngine(graph, engine="dense")
+    eng.query(Query(g, "S", sources=(0,)))
+    st = eng.apply_delta(insert=[graph.edges[0]])  # already present
+    assert st.rows_repaired == 0 and eng.clock.epoch == 0
+    assert eng.query(Query(g, "S", sources=(0,))).stats["cache"] == "hit"

@@ -77,6 +77,79 @@ def test_bitmm_traces_for_tpu():
     assert "pallas_call" in str(jaxpr)
 
 
+# ---------------------------------------------------------------------- #
+# Rectangular (R, n) path — the masked query engine contracts a compacted
+# block of R active rows against the full packed state.  CPU contract for
+# the TPU-only kernel: interpret mode against the jnp oracle, including
+# R < 128 (smaller than the TPU lane width / default ti tile).
+# ---------------------------------------------------------------------- #
+
+
+def _random_rect_packed(rng, b, m, n, density=0.15):
+    dense = rng.random((b, m, n)) < density
+    return pack_bits(jnp.asarray(dense)), dense
+
+
+@pytest.mark.parametrize(
+    "r,n",
+    [
+        (32, 256),  # R < lane width
+        (64, 128),  # R < lane width, single k tile
+        (96, 128),  # R < lane width, non-power-of-two
+        (128, 512),  # R == lane width, rectangular k
+        (256, 128),  # R > n: more active-row slots than columns
+    ],
+)
+def test_bitmm_rectangular_matches_oracle(r, n):
+    rng = np.random.default_rng(r * 1000 + n)
+    lhs_p, lhs = _random_rect_packed(rng, 2, r, n)  # (2, r, n//32)
+    rhs_p, rhs = _random_rect_packed(rng, 2, n, n)  # (2, n, n//32)
+    got = ops.bitmm(lhs_p, rhs_p)
+    want = ref.bitmm_ref(lhs_p, rhs_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want_dense = np.einsum("bik,bkj->bij", lhs, rhs) > 0
+    np.testing.assert_array_equal(np.asarray(unpack_bits(got, n)), want_dense)
+
+
+@pytest.mark.parametrize("ti,tw,tk", [(32, 4, 128), (16, 2, 64), (64, 8, 256)])
+def test_bitmm_rectangular_tile_shapes(ti, tw, tk):
+    """Sub-lane tiles on the rectangular kernel entry point itself."""
+    r, n = 64, 256
+    rng = np.random.default_rng(ti + tw + tk)
+    lhs_p, _ = _random_rect_packed(rng, 1, r, n)
+    rhs_p, _ = _random_rect_packed(rng, 1, n, n)
+    got = bitmm_pallas(lhs_p, rhs_p, ti=ti, tw=tw, tk=tk, interpret=True)
+    want = ref.bitmm_ref(lhs_p, rhs_p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitmm_rectangular_empty_and_full_rows():
+    """Degenerate densities on the rectangular path: all-zero lhs rows give
+    zero output; an all-ones contraction row ORs the whole rhs."""
+    r, n = 32, 128
+    rhs_p, rhs = _random_rect_packed(np.random.default_rng(5), 1, n, n, 0.2)
+    zeros = jnp.zeros((1, r, n // 32), jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.bitmm(zeros, rhs_p)), np.zeros((1, r, n // 32))
+    )
+    ones = jnp.full((1, r, n // 32), jnp.uint32(0xFFFFFFFF))
+    got = unpack_bits(ops.bitmm(ones, rhs_p), n)
+    want = np.broadcast_to(rhs.any(axis=1, keepdims=True), (1, r, n))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_bitmm_rectangular_traces_for_tpu():
+    """The rectangular non-interpret program must trace with TPU block
+    specs (grid/index-map coverage for m != k)."""
+    r, n = 64, 512
+    lhs = jax.ShapeDtypeStruct((2, r, n // 32), jnp.uint32)
+    rhs = jax.ShapeDtypeStruct((2, n, n // 32), jnp.uint32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: bitmm_pallas(a, b, ti=64, tw=16, tk=512)
+    )(lhs, rhs)
+    assert "pallas_call" in str(jaxpr)
+
+
 @pytest.mark.parametrize("n", [128, 256])
 @pytest.mark.parametrize("density", [0.05, 0.3])
 def test_bitmm_or_fused_epilogue(n, density):
