@@ -5,10 +5,12 @@
 Builds an ontology graph, generates a synthetic single-source workload over
 the paper's Query 1 and Query 2 grammars (Zipf-ish repeated sources, as a
 real serving mix would see), and drives it through the QueryEngine:
-requests arriving in the same batch window are coalesced per grammar into
-one masked-closure call, and repeated/overlapping requests are served from
-the materialized closure cache.  Prints per-request latency percentiles
-split by cache state, plus plan-cache counters.
+requests arriving in the same batch window are coalesced per (grammar,
+semantics) into one masked-closure call, and repeated/overlapping requests
+are served from the materialized closure cache.  A ``--path-frac`` slice of
+the mix asks for ``semantics="single_path"`` (paper Section 5) and gets one
+witness path per result pair.  Prints per-request latency percentiles split
+by cache state and semantics, plus plan-cache counters.
 """
 from __future__ import annotations
 
@@ -29,6 +31,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--engine", default="dense")
+    ap.add_argument("--path-frac", type=float, default=0.25,
+                    help="fraction of requests served with single-path "
+                         "semantics (witness paths)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,16 +50,24 @@ def main() -> None:
             src = int(hot[int(rng.integers(0, len(hot)))])
         else:
             src = int(rng.integers(0, graph.n_nodes))
-        workload.append(Query(g, "S", sources=(src,)))
+        sem = (
+            "single_path"
+            if rng.random() < args.path_frac
+            else "relational"
+        )
+        workload.append(Query(g, "S", sources=(src,), semantics=sem))
 
     eng = QueryEngine(graph, engine=args.engine)
-    lat: dict[str, list[float]] = {"hit": [], "warm": [], "miss": []}
-    n_pairs = 0
+    lat: dict[tuple[str, str], list[float]] = {}
+    n_pairs = n_witnesses = 0
     t0 = time.perf_counter()
     for b in range(0, len(workload), args.batch):
         for r in eng.query_batch(workload[b : b + args.batch]):
-            lat[r.stats["cache"]].append(r.stats["latency_s"])
+            key = (r.stats["semantics"], r.stats["cache"])
+            lat.setdefault(key, []).append(r.stats["latency_s"])
             n_pairs += len(r.pairs)
+            if r.paths is not None:
+                n_witnesses += len(r.paths)
     wall = time.perf_counter() - t0
 
     print(
@@ -62,19 +75,21 @@ def main() -> None:
         f"engine={args.engine}, {args.requests} requests in batches of "
         f"{args.batch}"
     )
-    for status in ("miss", "warm", "hit"):
-        ls = lat[status]
-        if not ls:
-            continue
-        print(
-            f"[serve-cfpq] {status:4s}: {len(ls):3d} requests  "
-            f"p50={np.median(ls)*1e3:8.2f}ms  "
-            f"p95={np.percentile(ls, 95)*1e3:8.2f}ms"
-        )
+    for sem in ("relational", "single_path"):
+        for status in ("miss", "warm", "hit"):
+            ls = lat.get((sem, status))
+            if not ls:
+                continue
+            print(
+                f"[serve-cfpq] {sem:11s} {status:4s}: {len(ls):3d} requests  "
+                f"p50={np.median(ls)*1e3:8.2f}ms  "
+                f"p95={np.percentile(ls, 95)*1e3:8.2f}ms"
+            )
     stats = eng.plans.stats
     print(
         f"[serve-cfpq] plans: {stats.compile_misses} compiled, "
-        f"{stats.compile_hits} reused; {n_pairs} result pairs; "
+        f"{stats.compile_hits} reused; {n_pairs} result pairs "
+        f"({n_witnesses} with witness paths); "
         f"{wall:.2f}s wall ({args.requests / wall:.1f} req/s)"
     )
 

@@ -10,7 +10,10 @@ a stream of operations where each op is either
     through ``QueryEngine.apply_delta``, which repairs the materialized
     closures row-wise instead of dropping them; or
   * a READ  — a coalesced batch of single-source queries over the paper's
-    Query 1 / Query 2 grammars (Zipf-ish hot sources, like serve_cfpq).
+    Query 1 / Query 2 grammars (Zipf-ish hot sources, like serve_cfpq),
+    a ``--path-frac`` slice of which asks for single-path semantics — the
+    cached length states ride through writes via min-plus row repair
+    exactly like the Boolean states do.
 
 Prints read-latency percentiles split by cache state, write (repair)
 latencies, and the cumulative repair counters — on an edit-heavy stream
@@ -37,6 +40,9 @@ def main() -> None:
     ap.add_argument("--write-frac", type=float, default=0.3)
     ap.add_argument("--delete-frac", type=float, default=0.2,
                     help="fraction of writes that delete instead of insert")
+    ap.add_argument("--path-frac", type=float, default=0.25,
+                    help="fraction of reads served with single-path "
+                         "semantics (witness paths)")
     ap.add_argument("--engine", default="dense")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -48,9 +54,9 @@ def main() -> None:
     hot = rng.integers(0, graph.n_nodes, size=8)
 
     eng = QueryEngine(graph, engine=args.engine)
-    read_lat: dict[str, list[float]] = {"hit": [], "warm": [], "miss": []}
+    read_lat: dict[tuple[str, str], list[float]] = {}
     write_lat: list[float] = []
-    n_pairs = n_reads = n_writes = 0
+    n_pairs = n_reads = n_writes = n_witnesses = 0
 
     t0 = time.perf_counter()
     for _ in range(args.ops):
@@ -79,10 +85,18 @@ def main() -> None:
                     src = int(hot[int(rng.integers(0, len(hot)))])
                 else:
                     src = int(rng.integers(0, graph.n_nodes))
-                batch.append(Query(g, "S", sources=(src,)))
+                sem = (
+                    "single_path"
+                    if rng.random() < args.path_frac
+                    else "relational"
+                )
+                batch.append(Query(g, "S", sources=(src,), semantics=sem))
             for r in eng.query_batch(batch, snapshot=eng.snapshot()):
-                read_lat[r.stats["cache"]].append(r.stats["latency_s"])
+                key = (r.stats["semantics"], r.stats["cache"])
+                read_lat.setdefault(key, []).append(r.stats["latency_s"])
                 n_pairs += len(r.pairs)
+                if r.paths is not None:
+                    n_witnesses += len(r.paths)
                 n_reads += 1
     wall = time.perf_counter() - t0
 
@@ -91,15 +105,16 @@ def main() -> None:
         f"edges (v{graph.version}), engine={args.engine}, "
         f"{n_reads} reads + {n_writes} writes in {args.ops} ops"
     )
-    for status in ("miss", "warm", "hit"):
-        ls = read_lat[status]
-        if not ls:
-            continue
-        print(
-            f"[stream-cfpq] read {status:4s}: {len(ls):3d}  "
-            f"p50={np.median(ls)*1e3:8.2f}ms  "
-            f"p95={np.percentile(ls, 95)*1e3:8.2f}ms"
-        )
+    for sem in ("relational", "single_path"):
+        for status in ("miss", "warm", "hit"):
+            ls = read_lat.get((sem, status))
+            if not ls:
+                continue
+            print(
+                f"[stream-cfpq] read {sem:11s} {status:4s}: {len(ls):3d}  "
+                f"p50={np.median(ls)*1e3:8.2f}ms  "
+                f"p95={np.percentile(ls, 95)*1e3:8.2f}ms"
+            )
     if write_lat:
         print(
             f"[stream-cfpq] write (repair): {len(write_lat):3d}  "
@@ -111,7 +126,8 @@ def main() -> None:
         f"[stream-cfpq] repair totals: {d.rows_repaired} rows repaired, "
         f"{d.rows_evicted} evicted, {d.repair_iters} closure calls; "
         f"epoch {eng.clock.epoch}; {eng.plans.stats.compile_misses} plans "
-        f"compiled; {n_pairs} pairs; {wall:.2f}s wall"
+        f"compiled; {n_pairs} pairs ({n_witnesses} with witness paths); "
+        f"{wall:.2f}s wall"
     )
 
 

@@ -61,6 +61,7 @@ class Graph:
     )
     _edge_set: set | None = field(default=None, repr=False, compare=False)
     _edge_set_len: int = field(default=-1, repr=False, compare=False)
+    _log_floor: int = field(default=0, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     @property
@@ -123,12 +124,41 @@ class Graph:
             self._log.extend((self.version, "-", e) for e in removed)
         return self.version
 
+    def compact_log(self, min_version: int) -> int:
+        """Snapshot + truncate the edge log (the log is otherwise append-only
+        and unbounded).  The current ``edges`` list IS the snapshot — log
+        entries only exist to serve :meth:`delta_since` — so once every
+        consumer has ingested past ``min_version``, entries at versions
+        ``<= min_version`` can be dropped.  ``delta_since`` then errors
+        cleanly for versions before the compaction floor (consumers that
+        fell behind must resynchronize from the snapshot, e.g. the query
+        engine's full-invalidation path).  Returns the number of log
+        entries dropped."""
+        if min_version > self.version:
+            raise ValueError(
+                f"cannot compact to {min_version}: graph is at "
+                f"{self.version}"
+            )
+        start = bisect.bisect_right(
+            self._log, min_version, key=lambda r: r[0]
+        )
+        del self._log[:start]
+        self._log_floor = max(self._log_floor, min_version)
+        return start
+
     def delta_since(self, version: int) -> EdgeDelta:
         """Net edge delta between ``version`` and the current version.
-        O(tail): the log is version-sorted, so the start is bisected."""
+        O(tail): the log is version-sorted, so the start is bisected.
+        Raises ValueError for versions ahead of the graph or behind the
+        compaction floor (see :meth:`compact_log`)."""
         if version > self.version:
             raise ValueError(
                 f"version {version} is ahead of the graph ({self.version})"
+            )
+        if version < self._log_floor:
+            raise ValueError(
+                f"version {version} predates the compacted log "
+                f"(floor {self._log_floor})"
             )
         start = bisect.bisect_right(self._log, version, key=lambda r: r[0])
         ins: set[tuple[int, str, int]] = set()

@@ -33,10 +33,15 @@ INF = jnp.float32(jnp.inf)
 def _minplus(lhs: jnp.ndarray, rhs: jnp.ndarray, chunk: int = 64):
     """Batched min-plus matmul: out[p,i,j] = min_k lhs[p,i,k] + rhs[p,k,j].
 
-    Tiled over k with a fori_loop so peak memory is (P, n, chunk, n)."""
-    P, n, _ = lhs.shape
-    n_chunks = n // chunk if n % chunk == 0 else -(-n // chunk)
-    pad = n_chunks * chunk - n
+    Tiled over the contraction axis k with a fori_loop so peak memory is
+    (P, rows, chunk, cols).  Operands may be rectangular — the masked
+    single-path closures contract compacted (R, C) row blocks against
+    (C, n) context blocks."""
+    P, rows, K = lhs.shape
+    cols = rhs.shape[-1]
+    chunk = min(chunk, K)
+    n_chunks = -(-K // chunk)
+    pad = n_chunks * chunk - K
     if pad:
         lhs = jnp.pad(lhs, ((0, 0), (0, 0), (0, pad)), constant_values=jnp.inf)
         rhs = jnp.pad(rhs, ((0, 0), (0, pad), (0, 0)), constant_values=jnp.inf)
@@ -47,8 +52,16 @@ def _minplus(lhs: jnp.ndarray, rhs: jnp.ndarray, chunk: int = 64):
         cand = jnp.min(lk[:, :, :, None] + rk[:, None, :, :], axis=2)
         return jnp.minimum(acc, cand)
 
-    init = jnp.full((P, n, n), jnp.inf, jnp.float32)
+    init = jnp.full((P, rows, cols), jnp.inf, jnp.float32)
     return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+def base_lengths(T: jnp.ndarray) -> jnp.ndarray:
+    """Length annotation of a *base* matrix (``init_matrix`` output): every
+    present entry is a real length-1 edge.  ``isfinite == T`` holds, but do
+    NOT apply this to a derived/cached closure — its non-base entries are
+    not edges, and extraction would fail on them."""
+    return jnp.where(T, 1.0, jnp.inf).astype(jnp.float32)
 
 
 @partial(jax.jit, static_argnames=("tables", "max_iters"))
@@ -63,7 +76,7 @@ def single_path_closure(
     b_idx = jnp.asarray(tables.b_idx, jnp.int32)
     c_idx = jnp.asarray(tables.c_idx, jnp.int32)
     limit = max_iters if max_iters is not None else T.shape[-1] * T.shape[0]
-    L0 = jnp.where(T, 1.0, jnp.inf).astype(jnp.float32)
+    L0 = base_lengths(T)
 
     def cond(state):
         _, _, changed, it = state
@@ -87,8 +100,284 @@ def single_path_closure(
 
 
 # ---------------------------------------------------------------------- #
+# Source-restricted (masked) single-path closures — the engine workload.
+#
+# The state is the length matrix L alone: by construction isfinite(L) is
+# exactly the Boolean closure at every step (base entries start at 1,
+# every newly discovered entry receives a finite candidate), so the engine
+# caches ONE (N, n, n) f32 tensor per grammar instead of a (T, L) pair.
+# The row-mask machinery is the Boolean masked closure's (closure.py):
+# active rows are compacted to a static R-slot block, the min-plus
+# contraction runs over the compacted (≤ R or ≤ C) row set, and columns
+# reached from active rows join the mask until a joint fixpoint.  One
+# iteration therefore costs |P|·R²·n min-plus work instead of the
+# all-pairs |P|·n³ — the same row-compaction asymptotics as the Boolean
+# engines, applied to the far more expensive min-plus contraction.
+#
+# Freeze-on-first-discovery is preserved verbatim: candidates are written
+# only where isfinite(L) just flipped, and finite entries are NEVER
+# overwritten — extraction depends on recorded sums staying exact, and
+# warm restarts / delta repair depend on frozen rows staying bit-identical.
+# Lengths may legitimately differ from the all-pairs closure's (discovery
+# order differs), but every recorded length is a valid witness length.
+# ---------------------------------------------------------------------- #
+
+
+@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+def masked_single_path_closure(
+    L: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+):
+    """Source-restricted single-path closure (dense min-plus path).
+
+    ``L`` is the (N, n, n) f32 length state (``base_lengths`` of the base
+    matrix, or a cached state for a warm restart); ``src_mask`` the (n,)
+    bool row seed.  Returns ``(L, M, overflowed)``; rows of ``L`` under
+    ``M`` have ``isfinite(L)`` equal to the all-pairs Boolean closure rows
+    iff ``overflowed`` is False (otherwise re-enter with the returned
+    state and a larger ``row_capacity`` — the fixpoint is monotone and
+    finite entries are frozen, so no work is lost)."""
+    from .closure import _active_rows, _masked_limit
+
+    n = L.shape[-1]
+    if tables.n_prods == 0:
+        return L, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    a_idx = jnp.asarray(tables.a_idx, jnp.int32)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(L, max_iters)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        L, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], L[:, idx, :], INF)  # (N, R, n)
+        # compact the contraction axis too: only rows in M can contribute
+        lhs = jnp.where(
+            valid[None, None, :], rows[b_idx][:, :, idx], INF
+        )  # (P, R, R)
+        cand = _minplus(lhs, rows[c_idx])  # (P, R, n)
+        cand_a = (
+            jnp.full((tables.n_nonterms, R, n), jnp.inf).at[a_idx].min(cand)
+        )
+        newly = jnp.isfinite(cand_a) & ~jnp.isfinite(rows)
+        # freeze-on-first-discovery: finite entries are never overwritten;
+        # fill lanes carry inf so the scatter-min is duplicate-safe
+        L_next = L.at[:, idx, :].min(jnp.where(newly, cand_a, jnp.inf))
+        M_next = M | jnp.any(jnp.isfinite(rows), axis=(0, 1))
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(newly) | jnp.any(M_next & ~M)
+        return L_next, M_next, grew, overflow, it + 1
+
+    state = (L, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    L, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return L, M, overflow
+
+
+@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+def masked_frontier_single_path_closure(
+    L: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+):
+    """Masked single-path closure with the frontier (delta) trick: only
+    min-plus products through entries discovered in the previous iteration
+    are formed, and rows newly admitted to the mask enter the delta with
+    all their entries.  A new entry's length is then the min over
+    delta-involving splits — a subset of all splits, so it may exceed the
+    dense variant's choice, but both operands are frozen finite entries and
+    the recorded sum stays extraction-exact."""
+    from .closure import _active_rows, _masked_limit
+
+    n = L.shape[-1]
+    if tables.n_prods == 0:
+        return L, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    a_idx = jnp.asarray(tables.a_idx, jnp.int32)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(L, max_iters)
+
+    def cond(state):
+        _, D, _, overflow, it = state
+        return jnp.any(D) & ~overflow & (it < limit)
+
+    def body(state):
+        L, D, M, _, it = state
+        idx, valid = _active_rows(M, R)
+        vrow = valid[None, :, None]
+        rows = jnp.where(vrow, L[:, idx, :], INF)  # (N, R, n)
+        rows_d = jnp.where(D[:, idx, :] & vrow, rows, INF)  # delta entries
+        vk = valid[None, None, :]
+        lhs = jnp.where(vk, rows[b_idx][:, :, idx], INF)  # (P, R, R)
+        lhs_d = jnp.where(vk, rows_d[b_idx][:, :, idx], INF)
+        cand = jnp.minimum(
+            _minplus(lhs, rows_d[c_idx]), _minplus(lhs_d, rows[c_idx])
+        )
+        cand_a = (
+            jnp.full((tables.n_nonterms, R, n), jnp.inf).at[a_idx].min(cand)
+        )
+        newly = jnp.isfinite(cand_a) & ~jnp.isfinite(rows)
+        L_next = L.at[:, idx, :].min(jnp.where(newly, cand_a, jnp.inf))
+        M_next = M | jnp.any(jnp.isfinite(rows), axis=(0, 1))
+        fresh = M_next & ~M  # rows activated now: all their entries are new
+        D_next = jnp.zeros_like(D).at[:, idx, :].max(newly) | (
+            jnp.isfinite(L_next) & fresh[None, :, None]
+        )
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        return L_next, D_next, M_next, overflow, it + 1
+
+    D0 = jnp.isfinite(L) & src_mask[None, :, None]
+    state = (L, D0, src_mask, jnp.bool_(False), 0)
+    L, _, M, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return L, M, overflow
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "ctx_capacity", "max_iters"),
+)
+def masked_single_path_repair_closure(
+    L: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    frozen_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    ctx_capacity: int | None = None,
+    max_iters: int | None = None,
+):
+    """Repair fixpoint for cached length states (delta subsystem; DELTA.md).
+
+    Mirrors :func:`~repro.core.closure.masked_repair_closure`: ``src_mask``
+    seeds the rows to rebuild, rows under ``frozen_mask`` are trusted exact
+    and never recomputed but join the compacted contraction context
+    (≤ ``ctx_capacity`` rows), supplying their frozen lengths as constants.
+    Served by every backend — lengths are f32, so there is no packed
+    variant to specialize.  Returns ``(L, M, overflowed)``; frozen rows
+    come back bit-identical (the scatter only targets active slots)."""
+    from .closure import _active_rows, _masked_limit
+
+    n = L.shape[-1]
+    if tables.n_prods == 0:
+        return L, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    C = min(ctx_capacity if ctx_capacity is not None else n, n)
+    a_idx = jnp.asarray(tables.a_idx, jnp.int32)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(L, max_iters)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        L, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        cidx, cvalid = _active_rows(M | frozen_mask, C)
+        rows = jnp.where(valid[None, :, None], L[:, idx, :], INF)  # (N, R, n)
+        ctx = jnp.where(cvalid[None, :, None], L[:, cidx, :], INF)  # (N, C, n)
+        lhs = jnp.where(
+            cvalid[None, None, :], rows[b_idx][:, :, cidx], INF
+        )  # (P, R, C)
+        cand = _minplus(lhs, ctx[c_idx])  # (P, R, n)
+        cand_a = (
+            jnp.full((tables.n_nonterms, R, n), jnp.inf).at[a_idx].min(cand)
+        )
+        newly = jnp.isfinite(cand_a) & ~jnp.isfinite(rows)
+        L_next = L.at[:, idx, :].min(jnp.where(newly, cand_a, jnp.inf))
+        reach = jnp.any(jnp.isfinite(rows), axis=(0, 1))
+        M_next = M | (reach & ~frozen_mask)
+        overflow = (jnp.sum(M_next, dtype=jnp.int32) > R) | (
+            jnp.sum(M_next | frozen_mask, dtype=jnp.int32) > C
+        )
+        grew = jnp.any(newly) | jnp.any(M_next & ~M)
+        return L_next, M_next, grew, overflow, it + 1
+
+    state = (L, src_mask & ~frozen_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    L, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return L, M, overflow
+
+
+# ---------------------------------------------------------------------- #
 # Witness-path reconstruction ("simple search" of Theorem 5), host-side.
 # ---------------------------------------------------------------------- #
+
+
+class PathExtractor:
+    """Batched witness reconstruction over one (graph, grammar) pair.
+
+    Hoists the graph/grammar index structures (edge membership, productions
+    grouped by LHS) out of the per-pair extraction loop, so serving a
+    result with thousands of witnesses builds them once instead of once
+    per pair.  Extraction itself runs on an explicit stack (not Python
+    recursion) — witness lengths grow with the graph and would otherwise
+    hit the interpreter recursion limit.
+    """
+
+    def __init__(self, graph: Graph, g: CNFGrammar) -> None:
+        self.g = g
+        self._edges: dict[tuple[int, int], list[str]] = {}
+        for s, x, d in graph.edges:
+            self._edges.setdefault((s, d), []).append(x)
+        self._by_lhs: dict[int, list[tuple[int, int]]] = {}
+        for a, b, c in g.binary_prods:
+            self._by_lhs.setdefault(a, []).append((b, c))
+        self._term_by_lhs: dict[int, list[str]] = {}
+        for x, lhss in g.term_prods.items():
+            for a in lhss:
+                self._term_by_lhs.setdefault(a, []).append(x)
+
+    def extract(
+        self, L: np.ndarray, nonterm: str, i: int, j: int
+    ) -> list[tuple[int, str, int]]:
+        """Reconstruct a path i ->* j derivable from ``nonterm`` whose
+        length equals the recorded annotation ``L[nonterm, i, j]``.
+        Raises KeyError if (i, j) is not in R_nonterm."""
+        L = np.asarray(L)
+        a0 = self.g.index_of(nonterm)
+        if not np.isfinite(L[a0, i, j]):
+            raise KeyError(f"({nonterm}, {i}, {j}) not in the relation")
+        out: list[tuple[int, str, int]] = []
+        stack = [(a0, i, j, float(L[a0, i, j]))]
+        while stack:
+            a, s, d, length = stack.pop()
+            if length == 1.0:
+                for x in self._term_by_lhs.get(a, ()):  # A -> x, edge (s,x,d)
+                    if x in self._edges.get((s, d), ()):
+                        out.append((s, x, d))
+                        break
+                else:
+                    raise AssertionError(
+                        "length-1 witness without a matching edge"
+                    )
+                continue
+            for b, c in self._by_lhs.get(a, ()):
+                lb = L[b, s, :]
+                lc = L[c, :, d]
+                ks = np.nonzero(
+                    np.isfinite(lb) & np.isfinite(lc) & (lb + lc == length)
+                )[0]
+                if ks.size:
+                    k = int(ks[0])
+                    # LIFO: push the C-half first so the B-half emits first
+                    stack.append((c, k, d, float(lc[k])))
+                    stack.append((b, s, k, float(lb[k])))
+                    break
+            else:
+                raise AssertionError(
+                    "no consistent split — annotation invariant broken"
+                )
+        return out
 
 
 def extract_path(
@@ -99,46 +388,9 @@ def extract_path(
     i: int,
     j: int,
 ) -> list[tuple[int, str, int]]:
-    """Reconstruct a path i ->* j with l(pi) derivable from ``nonterm`` whose
-    length equals the recorded annotation.  Raises KeyError if (i,j) not in
-    R_A."""
-    L = np.asarray(L)
-    edge_set: dict[tuple[int, int], list[str]] = {}
-    for s, x, d in graph.edges:
-        edge_set.setdefault((s, d), []).append(x)
-    a0 = g.index_of(nonterm)
-    if not np.isfinite(L[a0, i, j]):
-        raise KeyError(f"({nonterm}, {i}, {j}) not in the relation")
-    by_lhs: dict[int, list[tuple[int, int]]] = {}
-    for a, b, c in g.binary_prods:
-        by_lhs.setdefault(a, []).append((b, c))
-    term_by_lhs: dict[int, list[str]] = {}
-    for x, lhss in g.term_prods.items():
-        for a in lhss:
-            term_by_lhs.setdefault(a, []).append(x)
-
-    out: list[tuple[int, str, int]] = []
-
-    def rec(a: int, i: int, j: int, length: float) -> None:
-        if length == 1.0:
-            for x in term_by_lhs.get(a, ()):  # A -> x with edge (i, x, j)
-                if x in edge_set.get((i, j), ()):
-                    out.append((i, x, j))
-                    return
-            raise AssertionError("length-1 witness without a matching edge")
-        for b, c in by_lhs.get(a, ()):
-            lb = L[b, i, :]
-            lc = L[c, :, j]
-            ks = np.nonzero(np.isfinite(lb) & np.isfinite(lc) & (lb + lc == length))[0]
-            if ks.size:
-                k = int(ks[0])
-                rec(b, i, k, float(lb[k]))
-                rec(c, k, j, float(lc[k]))
-                return
-        raise AssertionError("no consistent split — annotation invariant broken")
-
-    rec(a0, i, j, float(L[a0, i, j]))
-    return out
+    """One-shot wrapper around :class:`PathExtractor` (rebuilds the index
+    structures per call — batch extraction should use the class)."""
+    return PathExtractor(graph, g).extract(L, nonterm, i, j)
 
 
 # ---------------------------------------------------------------------- #
@@ -193,14 +445,20 @@ def evaluate_relational(
 def evaluate_single_path(
     graph: Graph, g: CNFGrammar, start: str
 ) -> dict[tuple[int, int], list[tuple[int, str, int]]]:
-    """Single-path CFPQ: one witness path per (i, j) in R_start."""
+    """Single-path CFPQ: one witness path per (i, j) in R_start, including
+    the empty-path witnesses of a nullable start symbol (matching the pairs
+    :func:`evaluate_relational` reports)."""
     tables = ProductionTables.from_grammar(g)
     T0 = init_matrix(graph, g)
     T, L = single_path_closure(T0, tables)
     L = np.asarray(L)
     a0 = g.index_of(start)
     n = graph.n_nodes
+    ex = PathExtractor(graph, g)
     out = {}
     for i, j in zip(*np.nonzero(np.asarray(T)[a0, :n, :n])):
-        out[(int(i), int(j))] = extract_path(L, graph, g, start, int(i), int(j))
+        out[(int(i), int(j))] = ex.extract(L, start, int(i), int(j))
+    if start in g.nullable:
+        for m in range(n):
+            out.setdefault((m, m), [])  # empty path m pi m
     return out

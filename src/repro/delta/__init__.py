@@ -10,7 +10,14 @@ Layers:
   * serving    — ``txn.py`` + ``engine/service.py``: ``apply_delta`` on the
     query engine, epoch-tagged snapshots, repair stats in query results.
 """
-from .repair import DeltaStats, RepairPlan, plan_repair, reverse_reach_rows
+from .repair import (
+    DeltaStats,
+    RepairPlan,
+    plan_repair,
+    repair_single_path_state,
+    repair_state,
+    reverse_reach_rows,
+)
 from .txn import EpochClock, Snapshot, StaleSnapshotError
 
 __all__ = [
@@ -20,5 +27,7 @@ __all__ = [
     "Snapshot",
     "StaleSnapshotError",
     "plan_repair",
+    "repair_single_path_state",
+    "repair_state",
     "reverse_reach_rows",
 ]

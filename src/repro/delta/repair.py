@@ -144,6 +144,62 @@ def plan_repair(graph: Graph, delta: EdgeDelta, pad_to: int) -> RepairPlan:
     return RepairPlan(evict, affected, ins_sources)
 
 
+def _repair_rows(
+    state_host: np.ndarray,
+    state_dev,
+    mask: np.ndarray,
+    plan: RepairPlan,
+    base_rows_fn,
+    run_closure,
+    compose_patch,
+) -> tuple[np.ndarray, object, np.ndarray, DeltaStats]:
+    """Shared row-surgery flow behind :func:`repair_state` and
+    :func:`repair_single_path_state` — the two differ only in how a
+    touched row merges with its base row (``compose_patch(old, base, ev)``
+    with ``ev`` the evicted-lane mask broadcastable over the patch).
+
+    1. base surgery on just the touched rows: grow inserted sources' base
+       rows, reset evicted rows to the new base (cached entries above them
+       may derive through a deleted edge; base-only is the sound floor to
+       rebuild from).  The patch is composed host-side and scattered into
+       the device copy — a rows-sized transfer.
+    2. insertion repair: warm-start the monotone fixpoint from the cached
+       state, seeded with the inserted sources plus every still-cached
+       ancestor row.  Cached rows outside the ancestor set are FROZEN —
+       provably unchanged by the delta, contracted against as constants,
+       never recomputed (and returned bit-identical).
+    """
+    stats = DeltaStats()
+    mask = np.array(mask, copy=True)
+
+    touched = plan.evict | plan.ins_sources
+    dirty = False
+    if touched.any():
+        idx = np.nonzero(touched)[0]
+        base = np.asarray(base_rows_fn(idx))  # (|N|, k, n) bool base rows
+        ev = plan.evict[idx][None, :, None]  # evicted reset; inserts grow
+        patch = compose_patch(state_host[:, idx, :], base, ev)
+        stats.rows_evicted = int((mask & plan.evict).sum())
+        mask &= ~plan.evict
+        jidx = jnp.asarray(idx.astype(np.int32))
+        state_dev = state_dev.at[:, jidx, :].set(jnp.asarray(patch))
+        dirty = True
+
+    seed = (plan.affected & mask) | plan.ins_sources
+    frozen = mask & ~plan.affected
+    if seed.any():
+        state_dev, M, calls = run_closure(state_dev, seed, frozen)
+        M = np.asarray(M)
+        stats.rows_repaired = int(M.sum())
+        stats.repair_iters = calls
+        # seed ⊆ M, so previously-exact affected rows are re-validated
+        mask |= M
+        dirty = True
+    if dirty:
+        state_host = np.asarray(state_dev)  # zero-copy view on CPU backend
+    return state_host, state_dev, mask, stats
+
+
 def repair_state(
     T_host: np.ndarray,
     T_dev,
@@ -152,7 +208,7 @@ def repair_state(
     base_rows_fn,
     run_closure,
 ) -> tuple[np.ndarray, object, np.ndarray, DeltaStats]:
-    """Apply ``plan`` to one grammar's cached state.
+    """Apply ``plan`` to one grammar's cached Boolean state.
 
     ``T_host`` / ``T_dev`` are the host view and device copy of the cached
     closure; only the rows the plan touches are rebuilt and transferred —
@@ -167,42 +223,50 @@ def repair_state(
     Returns ``(T_host, T_dev, mask, stats)``; every returned row under
     ``mask`` equals the from-scratch closure row on the mutated graph.
     """
-    stats = DeltaStats()
-    mask = np.array(mask, copy=True)
 
-    # 1. base surgery on just the touched rows: grow inserted sources'
-    #    base rows, reset evicted rows to the new base (cached entries
-    #    above them may derive through a deleted edge; base-only is the
-    #    sound floor to rebuild from).  The patch is composed host-side
-    #    and scattered into the device copy — a rows-sized transfer.
-    touched = plan.evict | plan.ins_sources
-    dirty = False
-    if touched.any():
-        idx = np.nonzero(touched)[0]
-        rows = base_rows_fn(idx)
-        ev = plan.evict[idx][None, :, None]  # evicted reset; inserts grow
-        patch = np.where(ev, rows, T_host[:, idx, :] | rows)
-        stats.rows_evicted = int((mask & plan.evict).sum())
-        mask &= ~plan.evict
-        jidx = jnp.asarray(idx.astype(np.int32))
-        T_dev = T_dev.at[:, jidx, :].set(jnp.asarray(patch))
-        dirty = True
+    def compose(old, base, ev):
+        return np.where(ev, base, old | base)
 
-    # 2. insertion repair: warm-start the monotone fixpoint from the cached
-    #    state, seeded with the inserted sources plus every still-cached
-    #    ancestor row.  Cached rows outside the ancestor set are FROZEN —
-    #    provably unchanged by the delta, contracted against as constants,
-    #    never recomputed (and returned bit-identical).
-    seed = (plan.affected & mask) | plan.ins_sources
-    frozen = mask & ~plan.affected
-    if seed.any():
-        T_dev, M, calls = run_closure(T_dev, seed, frozen)
-        M = np.asarray(M)
-        stats.rows_repaired = int(M.sum())
-        stats.repair_iters = calls
-        # seed ⊆ M, so previously-exact affected rows are re-validated
-        mask |= M
-        dirty = True
-    if dirty:
-        T_host = np.asarray(T_dev)  # zero-copy view on the CPU backend
-    return T_host, T_dev, mask, stats
+    return _repair_rows(
+        T_host, T_dev, mask, plan, base_rows_fn, run_closure, compose
+    )
+
+
+def repair_single_path_state(
+    L_host: np.ndarray,
+    L_dev,
+    mask: np.ndarray,
+    plan: RepairPlan,
+    base_rows_fn,
+    run_closure,
+) -> tuple[np.ndarray, object, np.ndarray, DeltaStats]:
+    """Single-path analog of :func:`repair_state` for cached length states.
+
+    ``L`` is the (|N|, n, n) f32 matrix of core/semantics.py —
+    ``isfinite(L)`` is the Boolean closure, finite values are witness
+    lengths frozen at first discovery.  The surgery is the same row plan,
+    adapted to the freeze contract: previously finite entries are NEVER
+    overwritten (witnesses recorded elsewhere split through them by exact
+    length equality), so
+
+    * inserted sources only *fill* entries that were absent (new base
+      edges enter at length 1; existing annotations stay), then re-enter
+      the repair fixpoint as seeds;
+    * evicted rows reset wholesale to base lengths — and because any row
+      whose recorded splits pass through an evicted row is itself an
+      ancestor of the deleted edge (hence evicted too), surviving rows'
+      annotations remain extraction-consistent.
+
+    ``run_closure(L_dev, seed_mask, frozen_mask) -> (L_dev', M', n_calls)``
+    runs the single-path repair fixpoint (semantics="single_path" through
+    the engine's plan cache).  Returns ``(L_host, L_dev, mask, stats)``.
+    """
+
+    def compose(old, base, ev):
+        base_l = np.where(base, np.float32(1.0), np.float32(np.inf))
+        keep = np.isfinite(old) & ~ev  # freeze: never overwrite finite
+        return np.where(keep, old, base_l).astype(np.float32)
+
+    return _repair_rows(
+        L_host, L_dev, mask, plan, base_rows_fn, run_closure, compose
+    )

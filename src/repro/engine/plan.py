@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import closure as _closure
+from repro.core import semantics as _semantics
 from repro.core.matrices import ProductionTables
 
 #: masked (source-restricted) closure per backend — the serving fast path.
@@ -36,6 +37,25 @@ REPAIR_ENGINES = {
     "frontier": _closure.masked_repair_closure,
     "bitpacked": _closure.masked_bitpacked_repair_closure,
 }
+
+#: masked single-path (length-annotated) closure per backend.  Lengths are
+#: f32 — there is no packed layout to exploit — so the bitpacked backend
+#: routes through the dense min-plus path (see :func:`sp_engine_name`).
+SP_ENGINES = {
+    "dense": _semantics.masked_single_path_closure,
+    "frontier": _semantics.masked_frontier_single_path_closure,
+}
+
+
+def sp_engine_name(engine: str, repair: bool = False) -> str:
+    """Backend name to key single-path plans under, chosen so PlanKeys
+    collapse onto one compiled executable wherever the underlying function
+    is shared: engines without a length-annotated variant (bitpacked)
+    alias to dense, and the repair variant — one function serves every
+    backend — always keys as dense."""
+    if repair:
+        return "dense"
+    return engine if engine in SP_ENGINES else "dense"
 
 
 def row_buckets(n: int) -> list[int]:
@@ -66,6 +86,10 @@ class PlanKey:
     ``(T, src_mask, frozen_mask) -> (T, mask, overflow)``.
     ``ctx_capacity`` is the repair contraction-context bucket (active plus
     frozen rows) on the dense/frontier backends; 0 when unused.
+    ``semantics`` selects the state algebra: ``"relational"`` executables
+    run on the (N, n, n) bool matrix, ``"single_path"`` ones on the
+    (N, n, n) f32 length matrix (isfinite == the Boolean closure), with
+    otherwise identical signatures.
     """
 
     tables: ProductionTables
@@ -74,6 +98,7 @@ class PlanKey:
     row_capacity: int
     repair: bool = False
     ctx_capacity: int = 0
+    semantics: str = "relational"
 
 
 @dataclass
@@ -113,10 +138,25 @@ class CompiledClosureCache:
         return exe
 
     def _build(self, key: PlanKey):
+        m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
+        if key.semantics == "single_path":
+            L = jax.ShapeDtypeStruct(
+                (key.tables.n_nonterms, key.n, key.n), jnp.float32
+            )
+            if key.repair:  # one repair variant serves every backend
+                kw = {"row_capacity": key.row_capacity}
+                if key.ctx_capacity:
+                    kw["ctx_capacity"] = key.ctx_capacity
+                return _semantics.masked_single_path_repair_closure.lower(
+                    L, key.tables, m, m, **kw
+                ).compile()
+            fn = SP_ENGINES[key.engine]
+            return fn.lower(
+                L, key.tables, m, row_capacity=key.row_capacity
+            ).compile()
         T = jax.ShapeDtypeStruct(
             (key.tables.n_nonterms, key.n, key.n), jnp.bool_
         )
-        m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
         if key.repair:
             fn = REPAIR_ENGINES[key.engine]
             kw = {"row_capacity": key.row_capacity}

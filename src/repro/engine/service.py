@@ -1,13 +1,21 @@
 """Batched single-/multi-source CFPQ serving.
 
 ``QueryEngine`` is bound to one graph and serves queries over any number of
-grammars.  A batch is coalesced per grammar: the union of all requested
-source rows is computed in ONE masked-closure call (see core/closure.py),
-then each request slices its rows out.  Per grammar the engine keeps a
-*materialized* closure state ``(T, mask)`` — rows listed in ``mask`` are
-already exact — so repeated or overlapping queries against an unchanged
-graph are pure row slices (no device work at all), and new sources warm-
-start the monotone fixpoint from the cached state instead of from T0.
+grammars.  A batch is coalesced per (grammar, semantics): the union of all
+requested source rows is computed in ONE masked-closure call (see
+core/closure.py), then each request slices its rows out.  Per grammar the
+engine keeps a *materialized* closure state ``(T, mask)`` — rows listed in
+``mask`` are already exact — so repeated or overlapping queries against an
+unchanged graph are pure row slices (no device work at all), and new
+sources warm-start the monotone fixpoint from the cached state instead of
+from T0.
+
+Single-path queries (``semantics="single_path"``, paper Section 5) are
+served the same way from a second materialized state per grammar: the
+(N, n, n) f32 length matrix of core/semantics.py (``isfinite`` of it IS the
+Boolean closure), maintained by masked single-path closures with the same
+row-capacity bucket ladder, plus batched witness reconstruction
+(``PathExtractor``) over the host copy at slice time.
 
 Cache states reported per request:
   ``hit``   every requested row was already materialized;
@@ -40,11 +48,22 @@ from repro.core.matrices import (
     init_matrix_rows,
     padded_size,
 )
-from repro.core.semantics import extract_path, single_path_closure
-from repro.delta.repair import DeltaStats, plan_repair, repair_state
+from repro.core.semantics import PathExtractor, base_lengths
+from repro.delta.repair import (
+    DeltaStats,
+    plan_repair,
+    repair_single_path_state,
+    repair_state,
+)
 from repro.delta.txn import EpochClock, Snapshot
 
-from .plan import MASKED_ENGINES, CompiledClosureCache, PlanKey, bucket_for
+from .plan import (
+    MASKED_ENGINES,
+    CompiledClosureCache,
+    PlanKey,
+    bucket_for,
+    sp_engine_name,
+)
 
 
 def grammar_key(g: CNFGrammar):
@@ -88,7 +107,17 @@ class _GrammarState:
     T: jnp.ndarray | None = None  # (N, n, n) bool closure state
     T_host: np.ndarray | None = None  # host copy for slicing
     mask: np.ndarray | None = None  # rows of T that are exact
-    sp: tuple[np.ndarray, np.ndarray] | None = None  # single-path (T, L)
+    # single-path state, cached next to the Boolean one: the (N, n, n) f32
+    # length matrix (isfinite == the Boolean closure on masked rows) plus
+    # its own row mask — the two semantics materialize independently.
+    sp_L: jnp.ndarray | None = None
+    sp_L_host: np.ndarray | None = None
+    sp_mask: np.ndarray | None = None
+    extractor: PathExtractor | None = None  # edge/production index cache
+    # witness memo keyed (start, i, j): valid as long as the graph and the
+    # frozen annotations are — i.e. until the next ingested delta (warm
+    # closure runs only add entries, they never rewrite frozen ones)
+    sp_paths: dict = field(default_factory=dict)
 
 
 class QueryEngine:
@@ -190,29 +219,54 @@ class QueryEngine:
         if delta:
             plan = plan_repair(g, delta, self.n)
             for state in self._states.values():
-                state.sp = None  # single-path states are dropped, not repaired
-                if state.T is None or state.mask is None:
-                    continue
-                T_np = (
-                    state.T_host
-                    if state.T_host is not None
-                    else np.asarray(state.T)
-                )
+                state.extractor = None  # edge indices are stale
+                state.sp_paths.clear()  # memoized witnesses may walk them
 
                 def base_rows(idx, grammar=state.grammar):
                     return init_matrix_rows(g, grammar, idx, pad_to=self.n)
 
-                def run(T_dev, seed, frozen, tables=state.tables):
-                    return self._run_fixpoint(tables, T_dev, seed, frozen)
+                if state.T is not None and state.mask is not None:
+                    T_np = (
+                        state.T_host
+                        if state.T_host is not None
+                        else np.asarray(state.T)
+                    )
 
-                T_host, T_dev, mask_new, st = repair_state(
-                    T_np, state.T, np.asarray(state.mask), plan,
-                    base_rows, run,
-                )
-                state.T = T_dev
-                state.T_host = T_host
-                state.mask = mask_new
-                stats.merge(st)
+                    def run(T_dev, seed, frozen, tables=state.tables):
+                        return self._run_fixpoint(tables, T_dev, seed, frozen)
+
+                    T_host, T_dev, mask_new, st = repair_state(
+                        T_np, state.T, np.asarray(state.mask), plan,
+                        base_rows, run,
+                    )
+                    state.T = T_dev
+                    state.T_host = T_host
+                    state.mask = mask_new
+                    stats.merge(st)
+                if state.sp_L is not None and state.sp_mask is not None:
+                    # single-path states repair too: insertions warm-start
+                    # the min-plus row repair (frozen rows bit-identical),
+                    # deletions evict affected rows to base lengths.
+                    L_np = (
+                        state.sp_L_host
+                        if state.sp_L_host is not None
+                        else np.asarray(state.sp_L)
+                    )
+
+                    def run_sp(L_dev, seed, frozen, tables=state.tables):
+                        return self._run_fixpoint(
+                            tables, L_dev, seed, frozen,
+                            semantics="single_path",
+                        )
+
+                    L_host, L_dev, sp_mask, st = repair_single_path_state(
+                        L_np, state.sp_L, np.asarray(state.sp_mask), plan,
+                        base_rows, run_sp,
+                    )
+                    state.sp_L = L_dev
+                    state.sp_L_host = L_host
+                    state.sp_mask = sp_mask
+                    stats.merge(st)
         self._version = g.version
         self._edge_set = frozenset(g.edges)
         self.delta_stats.merge(stats)
@@ -230,13 +284,24 @@ class QueryEngine:
         g = self.graph
         actual = frozenset(g.edges)
         if g.version != self._version:
-            delta = g.delta_since(self._version)
-            expected = (
-                self._edge_set | set(delta.inserted)
-            ) - set(delta.deleted)
-            if g.n_nodes == self._n_nodes and actual == expected:
-                self._ingest_delta(delta)
-                return
+            try:
+                delta = g.delta_since(self._version)
+            except ValueError:
+                # Log compacted past our version: the edit set is unknowable.
+                # If the content still equals what we served (the compacted
+                # tail was a net no-op), just resync the version; otherwise
+                # fall through to full invalidation below.
+                delta = None
+                if g.n_nodes == self._n_nodes and actual == self._edge_set:
+                    self._version = g.version
+                    return
+            if delta is not None:
+                expected = (
+                    self._edge_set | set(delta.inserted)
+                ) - set(delta.deleted)
+                if g.n_nodes == self._n_nodes and actual == expected:
+                    self._ingest_delta(delta)
+                    return
         if actual != self._edge_set or g.n_nodes != self._n_nodes:
             self._states.clear()  # out-of-band edit: full invalidation
             self._edge_set = actual
@@ -273,35 +338,46 @@ class QueryEngine:
         T,
         seed: np.ndarray,
         frozen: np.ndarray | None = None,
+        semantics: str = "relational",
     ):
         """Run the masked closure to completion from ``seed`` rows, growing
         the capacity bucket on overflow (monotone warm restarts, so no work
         is lost).  With ``frozen`` (delta repair) the run uses the repair
         variant: frozen rows are contracted against but never recomputed,
         so capacity tracks the edit's blast radius, not the cache size.
+        ``semantics="single_path"`` runs the length-annotated closures on
+        the f32 state instead (same signatures, same bucket ladder).
         Returns ``(T_device, M_host, n_calls)``."""
         mask = np.asarray(seed)
         repair = frozen is not None
+        single_path = semantics == "single_path"
+        eng_name = (
+            sp_engine_name(self.engine, repair=repair)
+            if single_path
+            else self.engine
+        )
         n_frozen = 0
         cap_c = 0
         if repair:
             frozen_dev = jnp.asarray(frozen)
             n_frozen = int(np.asarray(frozen).sum())
         cap = bucket_for(max(self.row_capacity, int(mask.sum())), self.n)
-        if repair and self.engine != "bitpacked":
-            # dense/frontier compact the contraction axis over active +
-            # frozen rows; bitpacked contracts full packed words instead
+        if repair and (single_path or self.engine != "bitpacked"):
+            # dense/frontier (and every single-path) repair compacts the
+            # contraction axis over active + frozen rows; the Boolean
+            # bitpacked repair contracts full packed words instead
             cap_c = bucket_for(max(cap, int(mask.sum()) + n_frozen), self.n)
         calls = 0
         while True:
             exe = self.plans.get(
                 PlanKey(
                     tables,
-                    self.engine,
+                    eng_name,
                     self.n,
                     cap,
                     repair=repair,
                     ctx_capacity=cap_c,
+                    semantics=semantics,
                 )
             )
             if repair:
@@ -320,24 +396,37 @@ class QueryEngine:
                 cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
         return T, np.asarray(M), calls
 
-    def _ensure_rows(self, state: _GrammarState, batch: list[Query]) -> str:
-        """Materialize closure rows covering the batch; returns cache state."""
+    def _ensure_rows(
+        self,
+        state: _GrammarState,
+        batch: list[Query],
+        semantics: str = "relational",
+    ) -> str:
+        """Materialize closure rows covering the batch (the Boolean state,
+        or the f32 length state for ``semantics="single_path"``); returns
+        the cache status."""
+        single_path = semantics == "single_path"
         need = self._need_mask(batch)
         if need is None:
             need = np.ones(self.n, dtype=bool)
             need[self.graph.n_nodes :] = False  # padding rows are empty
-        if state.mask is not None and (need <= state.mask).all():
+        mask = state.sp_mask if single_path else state.mask
+        cur = state.sp_L if single_path else state.T
+        if mask is not None and (need <= mask).all():
             return "hit"
-        status = "miss" if state.T is None else "warm"
-        if state.T is None:
-            state.T = init_matrix(self.graph, state.grammar, pad_to=self.n)
-            state.mask = np.zeros(self.n, dtype=bool)
-        T, M, _ = self._run_fixpoint(
-            state.tables, state.T, np.asarray(state.mask) | need
+        status = "miss" if cur is None else "warm"
+        if cur is None:
+            cur = init_matrix(self.graph, state.grammar, pad_to=self.n)
+            if single_path:
+                cur = base_lengths(cur)
+            mask = np.zeros(self.n, dtype=bool)
+        out, M, _ = self._run_fixpoint(
+            state.tables, cur, np.asarray(mask) | need, semantics=semantics
         )
-        state.T = T
-        state.T_host = np.asarray(T)
-        state.mask = M
+        if single_path:
+            state.sp_L, state.sp_L_host, state.sp_mask = out, np.asarray(out), M
+        else:
+            state.T, state.T_host, state.mask = out, np.asarray(out), M
         return status
 
     def _serve_relational(
@@ -352,6 +441,7 @@ class QueryEngine:
             "latency_s": latency,
             "cache": status,
             "engine": self.engine,
+            "semantics": "relational",
             "batched_with": len(batch),
             "active_rows": int(state.mask.sum()),
             "epoch": self.clock.epoch,
@@ -374,34 +464,53 @@ class QueryEngine:
         self, state: _GrammarState, batch: list[Query]
     ) -> list[QueryResult]:
         t0 = time.perf_counter()
-        if state.sp is None:
-            T0 = init_matrix(self.graph, state.grammar, pad_to=self.n)
-            T, L = single_path_closure(T0, state.tables)
-            state.sp = (np.asarray(T), np.asarray(L))
-            status = "miss"
-        else:
-            status = "hit"
-        T, L = state.sp
-        latency = time.perf_counter() - t0
+        status = self._ensure_rows(state, batch, semantics="single_path")
+        L = state.sp_L_host
+        if state.extractor is None:  # invalidated on every ingested delta
+            state.extractor = PathExtractor(self.graph, state.grammar)
+        extractor = state.extractor
         nn = self.graph.n_nodes
-        stats = {
-            "latency_s": latency,
-            "cache": status,
-            "engine": "single_path",
-            "batched_with": len(batch),
-            "epoch": self.clock.epoch,
-        }
-        outs = []
+        # state-scoped memo: repeated/overlapping sources — within a batch
+        # or across hot-serve batches — extract each witness exactly once
+        # per delta epoch; results get copies so callers can't alias it
+        memo = state.sp_paths
+        sliced = []
         for q in batch:
             a0 = state.grammar.index_of(q.start)
             rows = range(nn) if q.sources is None else q.sources
-            pairs = set()
-            paths = {}
+            pairs: set[tuple[int, int]] = set()
+            paths: dict[tuple[int, int], list[tuple[int, str, int]]] = {}
             for i in rows:
-                for j in np.nonzero(T[a0, i, :nn])[0]:
+                for j in np.nonzero(np.isfinite(L[a0, i, :nn]))[0]:
                     pairs.add((i, int(j)))
-                    paths[(i, int(j))] = extract_path(
-                        L, self.graph, state.grammar, q.start, i, int(j)
-                    )
-            outs.append(QueryResult(q, pairs, paths, dict(stats)))
-        return outs
+                    key = (q.start, i, int(j))
+                    path = memo.get(key)
+                    if path is None:
+                        path = memo[key] = extractor.extract(
+                            L, q.start, i, int(j)
+                        )
+                    paths[(i, int(j))] = list(path)
+            if q.start in state.grammar.nullable:
+                for m in rows:  # empty path m pi m, as in the relational path
+                    if (m, m) not in pairs:
+                        pairs.add((m, m))
+                        paths[(m, m)] = []
+            sliced.append((q, pairs, paths))
+        # latency includes witness extraction — the dominant per-request
+        # host cost on hot serves — not just the closure work
+        latency = time.perf_counter() - t0
+        stats = {
+            "latency_s": latency,
+            "cache": status,
+            "engine": self.engine,
+            "semantics": "single_path",
+            "batched_with": len(batch),
+            "active_rows": int(state.sp_mask.sum()),
+            "epoch": self.clock.epoch,
+            **self.delta_stats.as_dict(),
+            **self.plans.stats.as_dict(),
+        }
+        return [
+            QueryResult(q, pairs, paths, dict(stats))
+            for q, pairs, paths in sliced
+        ]

@@ -9,7 +9,8 @@ from repro.core.graph import Graph
 
 def cyk_recognize(g: CNFGrammar, start: str, word: list[str]) -> bool:
     """Classic CYK over a CNF grammar — used to verify extracted witness
-    paths really derive from the queried nonterminal."""
+    paths really derive from the queried nonterminal.  The split-point
+    scan is a NumPy reduction, so long witness strings stay cheap."""
     n = len(word)
     if n == 0:
         return start in g.nullable
@@ -22,11 +23,52 @@ def cyk_recognize(g: CNFGrammar, start: str, word: list[str]) -> bool:
         for i in range(0, n - span + 1):
             j = i + span
             for a, b, c in g.binary_prods:
-                for k in range(i + 1, j):
-                    if tab[i, k, b] and tab[k, j, c]:
-                        tab[i, j, a] = True
-                        break
+                if not tab[i, j, a]:
+                    # any split k in (i, j): B spans [i, k), C spans [k, j)
+                    tab[i, j, a] = bool(
+                        np.any(tab[i, i + 1 : j, b] & tab[i + 1 : j, j, c])
+                    )
     return bool(tab[0, n, g.index_of(start)])
+
+
+def assert_path_witness(
+    graph: Graph,
+    g: CNFGrammar,
+    start: str,
+    i: int,
+    j: int,
+    path: list[tuple[int, str, int]],
+    length: int | None = None,
+) -> None:
+    """Path-witness oracle: the reusable check every single-path test
+    asserts against.  ``path`` must be a real edge-by-edge walk i ->* j
+    through ``graph`` whose label string CYK-derives from ``start``;
+    with ``length`` given, the edge count must equal it.  An empty path
+    witnesses only (m, m) pairs of a nullable start symbol."""
+    if not path:
+        assert i == j, f"empty path cannot witness ({i}, {j})"
+        assert start in g.nullable, (
+            f"empty path for non-nullable start {start!r}"
+        )
+        assert length in (None, 0)
+        return
+    assert path[0][0] == i, f"path starts at {path[0][0]}, not {i}"
+    assert path[-1][2] == j, f"path ends at {path[-1][2]}, not {j}"
+    edges = graph.edge_set()
+    prev = i
+    for e in path:
+        s, _, d = e
+        assert s == prev, f"path breaks at {e} (expected source {prev})"
+        assert e in edges, f"{e} is not a graph edge"
+        prev = d
+    word = [x for _, x, _ in path]
+    assert cyk_recognize(g, start, word), (
+        f"label string {word} does not derive from {start!r}"
+    )
+    if length is not None:
+        assert len(path) == length, (
+            f"witness has {len(path)} edges, annotation says {length}"
+        )
 
 
 def random_cnf(rng: np.random.Generator, n_nt=3, n_t=2, n_bin=4, n_term=3):

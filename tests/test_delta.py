@@ -24,6 +24,7 @@ from repro.delta.repair import reverse_reach_rows
 from repro.delta.txn import EpochClock, Snapshot, StaleSnapshotError
 from repro.engine import CompiledClosureCache, Query, QueryEngine
 from repro.engine.plan import MASKED_ENGINES
+from helpers import assert_path_witness
 
 ENGINES = sorted(MASKED_ENGINES)
 
@@ -215,6 +216,171 @@ def test_differential_random_interleaving(engine):
         )
         want = scratch.query(Query(g, "S", sources=sources))
         assert got.pairs == want.pairs, (engine, step, sources)
+
+
+# ---------------------------------------------------------------------- #
+# Single-path (T, L) states: repaired, not dropped
+# ---------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_single_path_insert_repair_not_dropped(engine):
+    """Acceptance: after apply_delta (inserts), cached single-path states
+    are repaired in place — the next query is a pure cache hit and still
+    yields oracle-valid witnesses for the mutated graph."""
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=1)
+    eng = QueryEngine(graph, engine=engine)
+    src = (0, 3, 7)
+    eng.query(Query(g, "S", sources=src, semantics="single_path"))
+    st = eng.apply_delta(
+        insert=[(0, "type", 5), (5, "subClassOf", 3), (9, "type_r", 2)]
+    )
+    assert st.rows_repaired > 0 and st.repair_iters >= 1
+    r = eng.query(Query(g, "S", sources=src, semantics="single_path"))
+    assert r.stats["cache"] == "hit"  # repaired eagerly, not dropped
+    assert r.pairs == _pairs_for(graph, g, src)
+    for (i, j), path in r.paths.items():
+        assert_path_witness(graph, g, "S", i, j, path)
+
+
+def test_single_path_repair_freezes_unaffected_rows_bit_identical():
+    """Rows outside the insert's ancestor set keep their length rows
+    bit-identical through the repair (the frozen-row contract on L).  Two
+    disjoint communities: an insert into one must leave the other's rows
+    untouched."""
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(15, 25, seed=2).repeat(2)
+    half = graph.n_nodes // 2
+    eng = QueryEngine(graph, engine="dense")
+    eng.query(Query(g, "S", semantics="single_path"))
+    (state,) = eng._states.values()
+    L_before = np.array(state.sp_L_host, copy=True)
+    mask_before = np.array(state.sp_mask, copy=True)
+    from repro.delta.repair import plan_repair
+
+    insert = [(1, "subClassOf", 4), (8, "type", 3)]  # community 0 only
+    eng.apply_delta(insert=insert)
+    plan = plan_repair(eng.graph, eng.graph.delta_since(0), eng.n)
+    frozen = mask_before & ~plan.affected
+    assert frozen[half:graph.n_nodes].any()  # community 1 stayed frozen
+    np.testing.assert_array_equal(
+        state.sp_L_host[:, frozen, :], L_before[:, frozen, :]
+    )
+    # and previously-finite entries anywhere are never rewritten (freeze)
+    was = np.isfinite(L_before)
+    np.testing.assert_array_equal(state.sp_L_host[was], L_before[was])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_differential_single_path_interleaving(engine):
+    """Single-path extension of the differential acceptance test: under a
+    random write/read interleaving, the repaired (T, L) state must match
+    drop-and-recompute on T (pair sets) and still yield oracle-valid
+    witnesses.  Lengths may legitimately differ from a fresh closure's, so
+    validity is asserted, not equality."""
+    rng = np.random.default_rng(100 + ENGINES.index(engine))
+    g = Grammar.from_text("S -> a S b | a b").to_cnf()
+    n = 24
+    graph = random_labeled_graph(n, 50, ["a", "b"], seed=8)
+    graph.edges[:] = sorted(set(graph.edges))
+    eng = QueryEngine(graph, engine=engine)
+    plans = CompiledClosureCache()
+
+    def random_edge():
+        return (
+            int(rng.integers(0, n)),
+            ["a", "b"][int(rng.integers(0, 2))],
+            int(rng.integers(0, n)),
+        )
+
+    a0 = g.index_of("S")
+    for step in range(10):
+        op = rng.random()
+        if op < 0.35 and graph.edges:
+            victim = graph.edges[int(rng.integers(0, len(graph.edges)))]
+            eng.apply_delta(delete=[victim])
+        elif op < 0.7:
+            eng.apply_delta(insert=[random_edge() for _ in range(2)])
+        sources = tuple(
+            sorted(set(int(s) for s in rng.integers(0, n, size=3)))
+        )
+        got = eng.query(
+            Query(g, "S", sources=sources, semantics="single_path")
+        )
+        scratch = QueryEngine(
+            Graph(n, list(graph.edges)), engine=engine, plans=plans
+        )
+        want = scratch.query(Query(g, "S", sources=sources))
+        assert got.pairs == want.pairs, (engine, step, sources)
+        (state,) = eng._states.values()
+        L = state.sp_L_host
+        for (i, j), path in got.paths.items():
+            ann = None if not path else int(L[a0, i, j])
+            assert_path_witness(graph, g, "S", i, j, path, length=ann)
+
+
+# ---------------------------------------------------------------------- #
+# Edge-log compaction (core/graph.py)
+# ---------------------------------------------------------------------- #
+
+
+def test_compact_log_truncates_and_errors_cleanly():
+    g = Graph(5, [(0, "a", 1)])
+    g.insert_edges([(1, "a", 2)])  # v1
+    g.insert_edges([(2, "a", 3)])  # v2
+    g.delete_edges([(0, "a", 1)])  # v3
+    assert g.compact_log(2) == 2  # v1 + v2 entries dropped
+    # deltas from the floor onward still work
+    d = g.delta_since(2)
+    assert set(d.deleted) == {(0, "a", 1)} and not d.inserted
+    assert not g.delta_since(3)
+    # pre-compaction versions error cleanly instead of returning a
+    # silently-partial delta
+    with pytest.raises(ValueError, match="compacted"):
+        g.delta_since(0)
+    with pytest.raises(ValueError, match="compacted"):
+        g.delta_since(1)
+    # compacting beyond the graph's version is refused
+    with pytest.raises(ValueError):
+        g.compact_log(99)
+    # idempotent / monotone floor
+    assert g.compact_log(1) == 0
+    with pytest.raises(ValueError):
+        g.delta_since(1)
+
+
+def test_compaction_of_noop_tail_resyncs_without_drop_or_crash():
+    """Regression: compacting a net no-op log tail past the engine's
+    version must not strand the engine at a pre-floor version — the next
+    apply_delta would crash in delta_since — nor drop valid caches when
+    the served content is unchanged."""
+    graph = Graph(3, [(0, "a", 1)])
+    g = Grammar.from_text("S -> a").to_cnf()
+    eng = QueryEngine(graph)
+    assert eng.query(Query(g, "S", sources=(0,))).pairs == {(0, 1)}
+    graph.insert_edges([(1, "a", 2)])
+    graph.delete_edges([(1, "a", 2)])  # net no-op, version advanced to 2
+    graph.compact_log(graph.version)  # engine's version is now pre-floor
+    r = eng.query(Query(g, "S", sources=(0,)))
+    assert r.stats["cache"] == "hit"  # content unchanged: cache survives
+    eng.apply_delta(insert=[(0, "a", 2)])  # must not raise
+    assert eng.query(Query(g, "S", sources=(0,))).pairs == {(0, 1), (0, 2)}
+
+
+def test_engine_falls_back_to_full_drop_after_compaction():
+    """A consumer whose version predates the compaction floor cannot read
+    a delta; the engine must resynchronize from the snapshot (full drop)
+    instead of crashing or serving stale rows."""
+    graph = Graph(3, [(0, "a", 1)])
+    g = Grammar.from_text("S -> a").to_cnf()
+    eng = QueryEngine(graph)
+    assert eng.query(Query(g, "S", sources=(0,))).pairs == {(0, 1)}
+    graph.insert_edges([(0, "a", 2)])
+    graph.compact_log(graph.version)  # engine's version is now pre-floor
+    r = eng.query(Query(g, "S", sources=(0,)))
+    assert r.stats["cache"] == "miss"  # full invalidation, not repair
+    assert r.pairs == {(0, 1), (0, 2)}
 
 
 # ---------------------------------------------------------------------- #

@@ -1,4 +1,5 @@
-"""Replays Section 4.3 of the paper exactly (Figures 5-9)."""
+"""Replays Section 4.3 of the paper exactly (Figures 5-9), plus the
+Section 5 single-path result on the same running example."""
 import numpy as np
 
 from repro.core import closure
@@ -10,6 +11,8 @@ from repro.core.matrices import (
     relations_from_matrix,
 )
 from repro.core.semantics import evaluate_relational
+from repro.engine import Query, QueryEngine
+from helpers import assert_path_witness
 
 EXPECTED_RELATIONS = {
     "S": {(0, 0), (0, 2), (1, 2)},
@@ -65,6 +68,29 @@ def test_cnf_transform_reproduces_example():
     graph = paper_example_graph()
     rel = evaluate_relational(graph, query1_grammar().to_cnf(), "S")
     assert rel == EXPECTED_RELATIONS["S"]
+
+
+def test_single_path_section5_served_through_engine():
+    """Golden Section 5 result: the single-path semantics on the running
+    example, served through QueryEngine rather than the raw closure.  The
+    frozen annotations are 2/4/6 — each pair enters at the iteration the
+    Boolean closure discovers it (Figs. 7-9), so (1,2) freezes at length 2
+    (S -> type_r type through node 2), (0,2) at 4 (type_r wrapped around
+    the (1,2) witness), and (0,0) at 6 (subClassOf_r wrapped around the
+    (0,2) witness)."""
+    graph = paper_example_graph()
+    g = query1_grammar().to_cnf()
+    expected_lengths = {(0, 0): 6, (0, 2): 4, (1, 2): 2}
+    eng = QueryEngine(graph)
+    r = eng.query(Query(g, "S", semantics="single_path"))
+    assert r.pairs == EXPECTED_RELATIONS["S"]
+    assert set(r.paths) == EXPECTED_RELATIONS["S"]
+    for (i, j), path in r.paths.items():
+        assert_path_witness(
+            graph, g, "S", i, j, path, length=expected_lengths[(i, j)]
+        )
+    # e.g. the (1, 2) witness is the two-edge path of the paper's example
+    assert r.paths[(1, 2)] == [(1, "type_r", 2), (2, "type", 2)]
 
 
 def test_all_engines_agree_on_example():
