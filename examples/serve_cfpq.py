@@ -1,6 +1,7 @@
 """Batched CFPQ serving driver: the query-engine analog of launch/serve.py.
 
     PYTHONPATH=src python examples/serve_cfpq.py --requests 48 --batch 8
+    PYTHONPATH=src python examples/serve_cfpq.py --async --qps 96
 
 Builds an ontology graph, generates a synthetic single-source workload over
 the paper's Query 1 and Query 2 grammars (Zipf-ish repeated sources, as a
@@ -11,10 +12,19 @@ are served from the materialized closure cache.  A ``--path-frac`` slice of
 the mix asks for ``semantics="single_path"`` (paper Section 5) and gets one
 witness path per result pair.  Prints per-request latency percentiles split
 by cache state and semantics, plus plan-cache counters.
+
+``--async`` drives the same workload through the ``repro.serve`` loop
+instead of hand-assembled batches: requests arrive as an open-loop Poisson
+process at ``--qps``, the server's batch-window coalescer (``--batch`` /
+``--window``) packs whatever arrives together, the bounded admission queue
+(``--queue-depth``) sheds the excess as ``Overloaded``, and the report
+splits end-to-end latency into queue delay vs batch execution.  SERVING.md
+documents the knobs.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import numpy as np
@@ -22,6 +32,43 @@ import numpy as np
 from repro.core.grammar import query1_grammar, query2_grammar
 from repro.core.graph import ontology_graph
 from repro.engine import Query, QueryEngine
+from repro.serve import ServeConfig, drive_open_loop, poisson_arrivals
+
+
+async def run_async(args, graph, workload) -> None:
+    """Open-loop async serving: Poisson arrivals through CFPQServer."""
+    eng = QueryEngine(graph, engine=args.engine)
+    cfg = ServeConfig(
+        max_batch=args.batch,
+        batch_window_s=args.window,
+        max_queue_depth=args.queue_depth,
+    )
+    arrivals = poisson_arrivals(
+        len(workload), args.qps, np.random.default_rng(args.seed + 1)
+    )
+    run = await drive_open_loop(eng, workload, arrivals, cfg)
+
+    print(
+        f"[serve-cfpq] async: offered {args.qps:.0f} qps, window "
+        f"{args.window * 1e3:.1f}ms, max_batch {args.batch}, queue depth "
+        f"{args.queue_depth}"
+    )
+    for name, ls in (
+        ("end-to-end", run.e2e_s),
+        ("queue delay", run.queue_delay_s),
+        ("batch exec", run.batch_exec_s),
+    ):
+        if ls:
+            print(
+                f"[serve-cfpq] {name:11s}: p50={np.median(ls)*1e3:7.2f}ms  "
+                f"p99={np.percentile(ls, 99)*1e3:7.2f}ms"
+            )
+    print(
+        f"[serve-cfpq] {len(run.results)} served / {run.shed} shed; "
+        f"{run.stats.batches} batches (mean size {run.stats.mean_batch:.1f}, "
+        f"flushes {run.stats.flushes}); "
+        f"{run.throughput_qps:.1f} req/s completed"
+    )
 
 
 def main() -> None:
@@ -35,6 +82,16 @@ def main() -> None:
                     help="fraction of requests served with single-path "
                          "semantics (witness paths)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="drive the workload through the repro.serve async "
+                         "loop (open-loop arrivals) instead of explicit "
+                         "batches")
+    ap.add_argument("--qps", type=float, default=96.0,
+                    help="offered load of the --async arrival process")
+    ap.add_argument("--window", type=float, default=0.005,
+                    help="--async batch-window deadline (seconds)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="--async admission bound (queries in flight)")
     args = ap.parse_args()
 
     graph = ontology_graph(args.classes, args.instances, seed=args.seed)
@@ -56,6 +113,10 @@ def main() -> None:
             else "relational"
         )
         workload.append(Query(g, "S", sources=(src,), semantics=sem))
+
+    if args.use_async:
+        asyncio.run(run_async(args, graph, workload))
+        return
 
     eng = QueryEngine(graph, engine=args.engine)
     lat: dict[tuple[str, str], list[float]] = {}

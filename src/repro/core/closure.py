@@ -21,6 +21,23 @@ Engines
                      elsewhere) — the TPU-native adaptation of the paper's
                      sparse (CSR/CUSPARSE) implementations: 32x smaller HBM
                      traffic for the memory-bound regime.
+
+Invariants (relied on by engine/, delta/ and serve/; tested in
+tests/test_engine.py and tests/test_delta.py)
+---------------------------------------------
+* **Masked-row exactness.**  At the fixpoint of any masked closure, rows
+  of ``T`` selected by the returned mask ``M`` are *equal* to the
+  corresponding rows of the all-pairs closure — not an approximation
+  (soundness: every product is a real derivation; completeness: induction
+  on derivation height, see ENGINE.md §masking math).
+* **Monotone warm restarts.**  The fixpoint only ever adds entries, so an
+  ``overflowed=True`` return can be re-entered at a larger row-capacity
+  bucket from the returned ``(T, M)`` without losing or invalidating any
+  work; capacities are static shapes, never data.
+* **Frozen-row bit-identity.**  The ``*_repair_closure`` variants contract
+  *against* rows marked frozen but never recompute them: frozen rows of
+  the output are bit-identical to the input (the delta subsystem's repair
+  contract, asserted exactly in tests/test_delta.py).
 """
 from __future__ import annotations
 

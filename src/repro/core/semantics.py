@@ -14,6 +14,23 @@ Implementation note: the length annotation is a min-plus-style matrix product
 contraction (the (n, n, n) broadcast is tiled over k to bound memory) and
 write them only where the Boolean closure just discovered a new entry, which
 reproduces the paper's freeze-on-first-discovery rule exactly.
+
+Invariants (relied on by engine/service.py and delta/repair.py; tested in
+tests/test_single_path.py)
+--------------------------
+* **isfinite(L) == Boolean closure.**  On rows covered by the state's
+  mask, ``jnp.isfinite(L)`` IS the Boolean closure ``T`` — the engine
+  caches the single f32 tensor, never a ``(T, L)`` pair, and every
+  consumer may recover membership from finiteness alone.
+* **Freeze-on-first-discovery.**  A finite entry of ``L`` is never
+  overwritten — not by further fixpoint iterations, not by warm restarts
+  or capacity-bucket growth, not by delta repair (frozen rows come back
+  bit-identical).  Witness extraction splits an entry by *exact length
+  equality* (l_A == l_B + l_C), so this is a correctness requirement, not
+  an optimization.
+* **Backend-relative lengths.**  Recorded lengths may differ across
+  backends (discovery order differs) but each is the length of some real
+  witness path; ``extract_path`` reconstructs one of exactly that length.
 """
 from __future__ import annotations
 

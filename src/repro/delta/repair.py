@@ -23,9 +23,21 @@ deletions (non-monotone)
     other rows provably never derived through the deleted edge and stay
     exact.
 
-Correctness contract (tested bit-exactly in tests/test_delta.py): after
-repair, rows of ``T`` under ``mask`` are identical to the corresponding
-rows of a from-scratch closure on the mutated graph.
+Invariants (tested bit-exactly in tests/test_delta.py)
+------------------------------------------------------
+* **Repair == recompute.**  After repair, rows of ``T`` under ``mask`` are
+  identical to the corresponding rows of a from-scratch closure on the
+  mutated graph.
+* **Frozen-row bit-identity.**  Rows *outside* an insertion's ancestor set
+  are handed to the repair closure as frozen context and come back
+  bit-identical — byte-for-byte the cached rows, never "recomputed to the
+  same value".  The single-path analog additionally preserves every frozen
+  length annotation (freeze-on-first-discovery, core/semantics.py), which
+  keeps previously extracted witnesses valid.
+* **Eviction is conservative, never wrong.**  A deletion evicts exactly
+  the rows that could reach a deleted edge's source (reset to base,
+  dropped from the mask); surviving mask rows provably never derived
+  through the deleted edge.
 
 Both sweeps run on the *union* of the pre- and post-delta edge sets (the
 current edges plus the deleted ones) — a sound over-approximation of either

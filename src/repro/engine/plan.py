@@ -10,6 +10,21 @@ the AOT ``lower(...).compile()`` executable per plan key.
 Row capacities are bucketed (powers of two from 128 up to n) so warm
 restarts after an active-set overflow reuse at most O(log n) distinct
 executables per grammar instead of compiling per exact source count.
+
+Invariants
+----------
+* **PlanKey identity.**  A compiled executable is a pure function of its
+  :class:`PlanKey` — ``(tables, engine, n, row_capacity, repair,
+  ctx_capacity, semantics)`` — and of *nothing else*.  In particular it
+  never depends on graph data, so executables survive every delta (row
+  repair and full invalidation alike) and may be shared across engines
+  serving different graphs of the same padded size.
+* **Key aliasing is semantic.**  :func:`sp_engine_name` collapses keys
+  exactly where the underlying closure function is shared (bitpacked
+  single-path aliases to dense; the one single-path repair function keys
+  as dense for every backend), so cache-hit counters reflect real reuse.
+* **Stable across processes in shape only.**  Keys hash grammar tables by
+  value; nothing here persists executables — the cache is per process.
 """
 from __future__ import annotations
 

@@ -34,6 +34,7 @@ and padded size, not on the data.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -146,48 +147,66 @@ class QueryEngine:
         self._version = graph.version
         self.clock = EpochClock(version=graph.version)
         self.delta_stats = DeltaStats()  # cumulative over the engine's life
+        # Reentrancy guard for the serving layer (repro.serve): cache and
+        # state mutation is not atomic, so query_batch/apply_delta hold
+        # this across their whole body.  An RLock, not a Lock — apply_delta
+        # re-enters through _check_graph-triggered ingestion paths.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ #
     def query(self, q: Query, snapshot: Snapshot | None = None) -> QueryResult:
         return self.query_batch([q], snapshot=snapshot)[0]
 
     def query_batch(
-        self, queries: list[Query], snapshot: Snapshot | None = None
+        self,
+        queries: list[Query],
+        snapshot: Snapshot | None = None,
+        stats_extra: dict | None = None,
     ) -> list[QueryResult]:
         """Serve a batch: one closure call per (grammar, semantics) group.
 
         ``snapshot`` (from :meth:`snapshot`) pins the epoch the caller
         expects to read; if a delta was committed since, the batch raises
         ``StaleSnapshotError`` instead of serving rows of a newer graph.
+        ``stats_extra`` entries are merged into every result's stats — the
+        async serving loop uses it to tag coalesced batches (flush reason,
+        window size) atomically with the batch itself.  Results also carry
+        ``batch_total`` (queries submitted together) and ``batch_groups``
+        (closure-call groups they were sliced into).
         """
-        self._check_graph()
-        self.clock.validate(snapshot)
-        results: list[QueryResult | None] = [None] * len(queries)
-        groups: dict[tuple, list[int]] = {}
-        for qi, q in enumerate(queries):
-            if q.semantics not in ("relational", "single_path"):
-                raise ValueError(f"unknown semantics {q.semantics!r}")
-            self._validate_sources(q)
-            groups.setdefault((grammar_key(q.grammar), q.semantics), []).append(
-                qi
-            )
-        for (gkey, semantics), qidx in groups.items():
-            state = self._state_for(gkey, queries[qidx[0]].grammar)
-            batch = [queries[i] for i in qidx]
-            if semantics == "relational":
-                outs = self._serve_relational(state, batch)
-            else:
-                outs = self._serve_single_path(state, batch)
-            for i, out in zip(qidx, outs):
-                results[i] = out
-        return results  # type: ignore[return-value]
+        with self._lock:
+            self._check_graph()
+            self.clock.validate(snapshot)
+            results: list[QueryResult | None] = [None] * len(queries)
+            groups: dict[tuple, list[int]] = {}
+            for qi, q in enumerate(queries):
+                self.validate_query(q)
+                groups.setdefault(
+                    (grammar_key(q.grammar), q.semantics), []
+                ).append(qi)
+            for (gkey, semantics), qidx in groups.items():
+                state = self._state_for(gkey, queries[qidx[0]].grammar)
+                batch = [queries[i] for i in qidx]
+                if semantics == "relational":
+                    outs = self._serve_relational(state, batch)
+                else:
+                    outs = self._serve_single_path(state, batch)
+                for i, out in zip(qidx, outs):
+                    results[i] = out
+            for out in results:
+                out.stats["batch_total"] = len(queries)  # type: ignore[union-attr]
+                out.stats["batch_groups"] = len(groups)  # type: ignore[union-attr]
+                if stats_extra:
+                    out.stats.update(stats_extra)  # type: ignore[union-attr]
+            return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------ #
     # Delta ingestion (serving layer of the delta subsystem; DELTA.md).
     # ------------------------------------------------------------------ #
     def snapshot(self) -> Snapshot:
         """Pin the current epoch for cross-batch read consistency."""
-        return self.clock.snapshot()
+        with self._lock:  # (epoch, version) must not tear across a writer
+            return self.clock.snapshot()
 
     def apply_delta(
         self,
@@ -200,14 +219,15 @@ class QueryEngine:
         one repair pass.  Returns this delta's repair stats (the engine
         also accumulates them into every result's stats).
         """
-        self._check_graph()  # settle pending/out-of-band edits first
-        if delete:
-            self.graph.delete_edges(list(delete))
-        if insert:
-            self.graph.insert_edges(list(insert))
-        if self.graph.version == self._version:
-            return DeltaStats()  # edits were all no-ops
-        return self._ingest_delta()
+        with self._lock:
+            self._check_graph()  # settle pending/out-of-band edits first
+            if delete:
+                self.graph.delete_edges(list(delete))
+            if insert:
+                self.graph.insert_edges(list(insert))
+            if self.graph.version == self._version:
+                return DeltaStats()  # edits were all no-ops
+            return self._ingest_delta()
 
     def _ingest_delta(self, delta=None) -> DeltaStats:
         """Fold the graph's edge log since the last-served version into
@@ -317,7 +337,13 @@ class QueryEngine:
             self._states[gkey] = state
         return state
 
-    def _validate_sources(self, q: Query) -> None:
+    def validate_query(self, q: Query) -> None:
+        """Raise ``ValueError`` for a malformed query.  ``query_batch``
+        validates every member; admission layers (repro.serve) call this
+        per query at submit time so one bad request is rejected at its
+        caller instead of failing the whole coalesced batch."""
+        if q.semantics not in ("relational", "single_path"):
+            raise ValueError(f"unknown semantics {q.semantics!r}")
         for m in q.sources or ():
             if not 0 <= m < self.graph.n_nodes:
                 raise ValueError(f"source {m} outside graph")

@@ -1,0 +1,23 @@
+"""Async serving loop with admission control (serving subsystem).
+
+``CFPQServer`` fronts a :class:`~repro.engine.QueryEngine` with an
+asyncio admission queue, a per-(grammar, semantics, backend) batch-window
+coalescer, bounded-depth load shedding (:class:`Overloaded`), and an
+epoch-fenced writer path for ``apply_delta``.  See SERVING.md.
+"""
+from .coalesce import BatchWindow
+from .config import FlushReason, Overloaded, ServeConfig, ServeStats
+from .loadgen import OpenLoopRun, drive_open_loop, poisson_arrivals
+from .server import CFPQServer
+
+__all__ = [
+    "BatchWindow",
+    "CFPQServer",
+    "FlushReason",
+    "OpenLoopRun",
+    "Overloaded",
+    "ServeConfig",
+    "ServeStats",
+    "drive_open_loop",
+    "poisson_arrivals",
+]

@@ -1,0 +1,114 @@
+"""Serving-loop knobs, typed admission errors, and server-level stats.
+
+The three knobs trade latency against throughput (measured in
+benchmarks/bench_serving.py; discussion in SERVING.md):
+
+``max_batch``
+    Flush a batch window as soon as this many compatible queries are
+    buffered — the size bound of the coalescer.
+``batch_window_s``
+    Flush a non-full window this long after its first query arrived — the
+    deadline bound.  Every admitted query therefore waits at most
+    ``batch_window_s`` before its closure call starts (plus lock/queue
+    time), which is what bounds p99 at low load.
+``max_queue_depth``
+    Admission control: the number of admitted-but-unresolved queries the
+    server will hold.  Beyond it, ``submit`` sheds load by raising
+    :class:`Overloaded` immediately instead of queueing unboundedly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class Overloaded(RuntimeError):
+    """Load shed at admission: the bounded queue is full.
+
+    Raised *synchronously* by ``CFPQServer.submit`` — the query was never
+    admitted, holds no queue slot, and owns no future, so callers can
+    retry with backoff without leaking server state.
+    """
+
+    def __init__(self, depth: int, limit: int) -> None:
+        super().__init__(
+            f"admission queue full ({depth} in flight >= limit {limit})"
+        )
+        self.depth = depth
+        self.limit = limit
+
+
+class FlushReason:
+    """Why a batch window was flushed (surfaced in per-result stats)."""
+
+    SIZE = "size"  # max_batch compatible queries buffered
+    DEADLINE = "deadline"  # batch_window_s elapsed since the first query
+    FENCE = "fence"  # a writer is about to commit a delta
+    DRAIN = "drain"  # server drain/stop
+
+    ALL = (SIZE, DEADLINE, FENCE, DRAIN)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the async serving loop (see module docstring)."""
+
+    max_batch: int = 8
+    batch_window_s: float = 0.005
+    max_queue_depth: int = 256
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.batch_window_s < 0:
+            raise ValueError("batch_window_s must be >= 0")
+        if self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+
+
+@dataclass
+class ServeStats:
+    """Cumulative server counters (exposed as ``CFPQServer.stats``).
+
+    ``admitted`` counts queries that passed admission, ``shed`` ones
+    rejected with :class:`Overloaded`; every admitted query ends up in
+    ``served``, ``failed``, or ``cancelled`` (its caller went away while
+    it was parked in a window) — the exactly-once accounting the stress
+    test asserts.  ``coalesced`` sums batch sizes, so
+    ``coalesced / max(batches, 1)`` is the mean batch size actually
+    achieved at the offered load.
+    """
+
+    admitted: int = 0
+    shed: int = 0
+    served: int = 0
+    failed: int = 0
+    cancelled: int = 0
+    writes: int = 0
+    batches: int = 0
+    coalesced: int = 0
+    flushes: dict[str, int] = field(
+        default_factory=lambda: {r: 0 for r in FlushReason.ALL}
+    )
+
+    def note_flush(self, reason: str, size: int) -> None:
+        self.batches += 1
+        self.coalesced += size
+        self.flushes[reason] = self.flushes.get(reason, 0) + 1
+
+    @property
+    def mean_batch(self) -> float:
+        return self.coalesced / max(self.batches, 1)
+
+    def as_dict(self) -> dict:
+        return {
+            "admitted": self.admitted,
+            "shed": self.shed,
+            "served": self.served,
+            "failed": self.failed,
+            "cancelled": self.cancelled,
+            "writes": self.writes,
+            "batches": self.batches,
+            "coalesced": self.coalesced,
+            "mean_batch": self.mean_batch,
+            "flushes": dict(self.flushes),
+        }

@@ -1,0 +1,30 @@
+"""Docs stay wired: the same checks the CI docs job runs.
+
+Link/anchor integrity is cheap and runs always; the quickstart execution
+(ARCHITECTURE.md code blocks) costs a small closure compile and runs in
+tier-1 too so a doc-breaking API change fails locally, not just in the
+docs lane.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_doc_cross_references_resolve():
+    assert check_docs.check_links(check_docs.DOCS) == []
+
+
+def test_every_doc_has_headings():
+    for doc in check_docs.DOCS:
+        assert check_docs.anchors_of(check_docs.REPO / doc), doc
+
+
+def test_architecture_quickstart_blocks_execute():
+    blocks = check_docs.python_blocks(check_docs.REPO / "ARCHITECTURE.md")
+    assert len(blocks) >= 2, "quickstart must show sync + async snippets"
+    assert check_docs.run_quickstarts(check_docs.EXEC_DOCS) == []

@@ -1,0 +1,133 @@
+"""Docs CI: cross-reference anchors + runnable quickstart blocks.
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two checks over the subsystem docs (ARCHITECTURE/ENGINE/DELTA/SERVING.md):
+
+1. **Link/anchor integrity** — every relative markdown link must point to
+   an existing file, and every ``#anchor`` (own-file or cross-file) must
+   match a real heading's GitHub-style slug.  Renaming a heading that
+   another doc links to fails CI instead of silently 404ing.
+2. **Quickstart execution** — the ``python`` code blocks of
+   ARCHITECTURE.md are extracted in order and executed in one shared
+   namespace (doctest-style: later blocks may use earlier blocks' names),
+   so the README-style quickstart can never drift from the actual API.
+
+Exit status is nonzero on any failure; the report lists every problem,
+not just the first.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = ["ARCHITECTURE.md", "ENGINE.md", "DELTA.md", "SERVING.md"]
+#: docs whose ``python`` blocks must be runnable as-is (others may hold
+#: illustrative fragments)
+EXEC_DOCS = ["ARCHITECTURE.md"]
+
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
+#: inline links, excluding images; bare-url and reference links are not used
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip formatting/punctuation, lowercase,
+    spaces to hyphens."""
+    h = heading.strip().lower()
+    h = h.replace("`", "")  # inline code formatting doesn't reach the slug
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(m.group(2)) for m in _HEADING.finditer(path.read_text())}
+
+
+def check_links(docs: list[str]) -> list[str]:
+    problems: list[str] = []
+    anchor_cache: dict[Path, set[str]] = {}
+    for doc in docs:
+        src = REPO / doc
+        for m in _LINK.finditer(src.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            fpart, _, anchor = target.partition("#")
+            tpath = src if not fpart else (REPO / fpart)
+            if not tpath.exists():
+                problems.append(f"{doc}: broken link {target!r} (no such file)")
+                continue
+            if anchor:
+                if tpath.suffix != ".md":
+                    problems.append(
+                        f"{doc}: anchor on non-markdown target {target!r}"
+                    )
+                    continue
+                if tpath not in anchor_cache:
+                    anchor_cache[tpath] = anchors_of(tpath)
+                if anchor not in anchor_cache[tpath]:
+                    problems.append(
+                        f"{doc}: broken anchor {target!r} "
+                        f"(known: {sorted(anchor_cache[tpath])})"
+                    )
+    return problems
+
+
+def python_blocks(path: Path) -> list[tuple[int, str]]:
+    """(start line, source) of each ```python fenced block."""
+    blocks: list[tuple[int, str]] = []
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            blocks.append((start + 1, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def run_quickstarts(docs: list[str]) -> list[str]:
+    problems: list[str] = []
+    sys.path.insert(0, str(REPO / "src"))
+    for doc in docs:
+        namespace: dict = {"__name__": f"quickstart:{doc}"}
+        for line, src in python_blocks(REPO / doc):
+            try:
+                exec(compile(src, f"{doc}:{line}", "exec"), namespace)
+            except Exception as exc:  # noqa: BLE001 — reported, not hidden
+                problems.append(
+                    f"{doc}: quickstart block at line {line} failed: "
+                    f"{type(exc).__name__}: {exc}"
+                )
+                break  # later blocks in this doc depend on this one
+    return problems
+
+
+def main() -> int:
+    problems = check_links(DOCS)
+    problems += run_quickstarts(EXEC_DOCS)
+    n_blocks = sum(len(python_blocks(REPO / d)) for d in EXEC_DOCS)
+    if problems:
+        print(f"[check-docs] {len(problems)} problem(s):")
+        for p in problems:
+            print(f"[check-docs]   {p}")
+        return 1
+    print(
+        f"[check-docs] OK: {len(DOCS)} docs cross-checked, "
+        f"{n_blocks} quickstart block(s) executed"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
