@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.bench_engine
     PYTHONPATH=src python -m benchmarks.bench_engine --sizes 256 1024
+    PYTHONPATH=src python -m benchmarks.bench_engine --mesh 2x1
 
 Workload model: a graph of disjoint "communities" (the paper's g1-g3
 repeat construction — one ~128-node ontology tree repeated n/128 times)
@@ -10,15 +11,24 @@ needs the closure rows of its own community, so the masked engine does
 |P|·R²·n work against the all-pairs |P|·n³; the gap widens with n while
 the answer stays identical.
 
+``--mesh DxM`` adds a distributed section: the masked-opt engine sharded
+over a (data=D, model=M) host mesh vs the single-device masked engine on
+the same batch (ROADMAP "masked closure for the opt engine").  The
+process re-execs itself with ``--xla_force_host_platform_device_count``
+when it does not already see enough devices.
+
 Emits ONE JSON object on stdout:
   {"engine": ..., "sources": k, "results": [
      {"n": 256, "allpairs_s": ..., "batch_miss_s": ..., "batch_hit_s": ...,
-      "per_query_miss_s": ..., "active_rows": ..., "speedup": ...}, ...]}
+      "per_query_miss_s": ..., "active_rows": ..., "speedup": ...}, ...],
+   "mesh": {"shape": "2x1", "results": [...]}}   # with --mesh
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
@@ -52,6 +62,115 @@ def _time(fn) -> tuple[object, float]:
     t0 = time.perf_counter()
     out = fn()
     return out, time.perf_counter() - t0
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """'2x1' -> (2, 1) — the (data, model) host-mesh shape."""
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+        if d < 1 or m < 1:
+            raise ValueError
+    except ValueError:
+        raise SystemExit(f"--mesh wants DxM (e.g. 2x1), got {spec!r}")
+    return d, m
+
+
+def ensure_host_devices(need: int, module: str, argv: list[str]) -> None:
+    """Re-exec ``python -m module argv`` with enough forced host devices.
+
+    XLA fixes the device count at backend init (which module imports
+    already triggered), so the flag cannot be set in-process; when the
+    current process is short, replace it with one that has the flag —
+    stdout (the JSON) passes straight through.  One-shot: if the re-exec
+    still comes up short (e.g. ``JAX_PLATFORMS`` pins a non-CPU backend,
+    where the host-device flag has no effect), error out instead of
+    exec-looping.
+    """
+    import jax
+
+    if jax.device_count() >= need:
+        return
+    if os.environ.get("_REPRO_MESH_REEXEC"):
+        raise SystemExit(
+            f"--mesh needs {need} devices but only {jax.device_count()} are "
+            "visible even after forcing host devices (is JAX_PLATFORMS "
+            "pinned to a non-CPU backend?)"
+        )
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={need}".strip()
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")  # host devices: CPU-only trick
+    env["_REPRO_MESH_REEXEC"] = "1"
+    os.execve(
+        sys.executable, [sys.executable, "-m", module, *argv], env
+    )
+
+
+def bench_mesh_size(
+    n: int,
+    mesh_shape: tuple[int, int],
+    n_sources: int,
+    semantics: str = "relational",
+) -> dict:
+    """Masked-opt on a (data, model) host mesh vs the single-device masked
+    engine, same coalesced single-source batch of either semantics
+    (differentially checked).  Shared with bench_single_path."""
+    import jax
+
+    g = Grammar.from_text(GRAMMAR).to_cnf()
+    graph = community_graph(n)
+    n_sources = min(n_sources, n // COMMUNITY)
+    sources = tuple(t * COMMUNITY + 1 for t in range(n_sources))
+    queries = [
+        Query(g, "S", sources=(m,), semantics=semantics) for m in sources
+    ]
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+
+    timings: dict[str, tuple[float, float]] = {}
+    results: dict[str, list] = {}
+    for label, kw in (
+        ("masked_opt", {"engine": "opt", "mesh": mesh}),
+        ("masked", {"engine": "dense"}),
+    ):
+        plans = CompiledClosureCache()
+        QueryEngine(graph, plans=plans, **kw).query_batch(queries)  # warm
+        eng = QueryEngine(graph, plans=plans, **kw)
+        rs, miss_s = _time(lambda: eng.query_batch(queries))
+        _, hit_s = _time(lambda: eng.query_batch(queries))
+        timings[label] = (miss_s, hit_s)
+        results[label] = rs
+    for a, b in zip(results["masked_opt"], results["masked"]):
+        assert a.pairs == b.pairs, f"masked-opt {semantics} mismatch n={n}"
+    miss_s, hit_s = timings["masked_opt"]
+    out = {
+        "n": n,
+        "n_sources": n_sources,
+        "masked_opt_miss_s": round(miss_s, 4),
+        "masked_opt_hit_s": round(hit_s, 6),
+        "masked_miss_s": round(timings["masked"][0], 4),
+        "active_rows": results["masked_opt"][0].stats["active_rows"],
+        "opt_vs_masked_x": round(timings["masked"][0] / max(miss_s, 1e-9), 2),
+    }
+    if semantics == "single_path":
+        out["witnesses"] = sum(len(r.paths) for r in results["masked_opt"])
+    return out
+
+
+def mesh_setup(args, module: str, argv: list[str] | None) -> tuple | None:
+    """Shared ``--mesh`` front half: parse the shape and secure enough
+    host devices (may re-exec the process — call before any timing
+    work).  Returns the (data, model) shape, or None without ``--mesh``."""
+    if not args.mesh:
+        return None
+    shape = parse_mesh(args.mesh)
+    ensure_host_devices(
+        shape[0] * shape[1],
+        module,
+        list(argv) if argv is not None else sys.argv[1:],
+    )
+    return shape
 
 
 def bench_size(n: int, engine: str, n_sources: int) -> dict:
@@ -151,6 +270,13 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--engine", default="dense", choices=sorted(MASKED_ENGINES))
     ap.add_argument("--sources", type=int, default=8)
     ap.add_argument(
+        "--mesh",
+        default=None,
+        metavar="DxM",
+        help="add a masked-opt vs single-device-masked section on a "
+        "(data=D, model=M) host mesh (re-execs with forced host devices)",
+    )
+    ap.add_argument(
         "--smoke",
         action="store_true",
         help="tiny CI config: n=256 only, 2 sources",
@@ -158,6 +284,7 @@ def main(argv: list[str] | None = None) -> dict:
     args = ap.parse_args(argv)
     if args.smoke:
         args.sizes, args.sources = [256], 2
+    shape = mesh_setup(args, "benchmarks.bench_engine", argv)
     out = {
         "engine": args.engine,
         "sources": args.sources,
@@ -165,6 +292,13 @@ def main(argv: list[str] | None = None) -> dict:
         "results": [bench_size(n, args.engine, args.sources) for n in args.sizes],
         "retrace": [bench_retrace(n, args.engine) for n in args.sizes],
     }
+    if shape:
+        out["mesh"] = {
+            "shape": args.mesh,
+            "results": [
+                bench_mesh_size(n, shape, args.sources) for n in args.sizes
+            ],
+        }
     print(json.dumps(out, indent=2))
     return out
 

@@ -4,6 +4,7 @@ witness-extraction throughput, and length-state repair vs drop-and-recompute.
     PYTHONPATH=src python -m benchmarks.bench_single_path
     PYTHONPATH=src python -m benchmarks.bench_single_path --sizes 256
     PYTHONPATH=src python -m benchmarks.bench_single_path --smoke
+    PYTHONPATH=src python -m benchmarks.bench_single_path --mesh 2x1
 
 Workload model: the bench_engine community graph (disjoint ~128-node
 ontology trees, same-generation grammar), queried with
@@ -20,6 +21,11 @@ ontology trees, same-generation grammar), queried with
               fresh engine recomputing the same single-path rows from
               scratch (shared compiled plans, warmup pass first — no
               trace/compile time in either number).
+
+``--mesh DxM`` adds a distributed section: the masked-opt single-path
+closure sharded over a (data=D, model=M) host mesh vs the single-device
+masked engine on the same batch (re-execs itself with forced host
+devices when needed, like bench_engine).
 
 Emits ONE JSON object on stdout, shaped like bench_delta.
 """
@@ -39,7 +45,13 @@ from repro.engine import CompiledClosureCache, Query, QueryEngine
 from repro.engine.plan import MASKED_ENGINES
 
 from .bench_delta import _edit_batch
-from .bench_engine import COMMUNITY, GRAMMAR, community_graph
+from .bench_engine import (
+    COMMUNITY,
+    GRAMMAR,
+    bench_mesh_size,
+    community_graph,
+    mesh_setup,
+)
 
 
 def _time(fn) -> tuple[object, float]:
@@ -172,6 +184,13 @@ def main(argv: list[str] | None = None) -> dict:
         help="skip the all-pairs min-plus reference above this n",
     )
     ap.add_argument(
+        "--mesh",
+        default=None,
+        metavar="DxM",
+        help="add a masked-opt vs single-device-masked single-path "
+        "section on a (data=D, model=M) host mesh",
+    )
+    ap.add_argument(
         "--smoke",
         action="store_true",
         help="tiny CI config: n=256, one rate, 2 sources",
@@ -180,6 +199,7 @@ def main(argv: list[str] | None = None) -> dict:
     if args.smoke:
         args.sizes, args.rates, args.sources = [256], [0.01], 2
         args.spread = 1
+    shape = mesh_setup(args, "benchmarks.bench_single_path", argv)
     plans = CompiledClosureCache()
     allpairs_memo: dict = {}
     out = {
@@ -196,6 +216,14 @@ def main(argv: list[str] | None = None) -> dict:
             for rate in args.rates
         ],
     }
+    if shape:
+        out["mesh"] = {
+            "shape": args.mesh,
+            "results": [
+                bench_mesh_size(n, shape, args.sources, "single_path")
+                for n in args.sizes
+            ],
+        }
     print(json.dumps(out, indent=2))
     return out
 

@@ -202,7 +202,6 @@ def opt_closure(
     """T^cf with one-sided packed operand exchange + int8 MXU contraction."""
     if tables.n_prods == 0:
         return T
-    from jax.sharding import PartitionSpec as P
 
     b_idx = jnp.asarray(tables.b_idx, jnp.int32)
     c_idx = jnp.asarray(tables.c_idx, jnp.int32)
@@ -211,12 +210,7 @@ def opt_closure(
     Tp = pack_bits(T)  # (N, n, w) uint32 — the persistent state
 
     if plan is not None:
-        row = (
-            (plan.pod_axis, plan.data_axis) if plan.pod_axis else plan.data_axis
-        )
-        row_spec = P(None, row, None)  # k replicated within a mesh row
-        col_spec = P(None, None, plan.model_axis)
-        state_spec = P(None, row, plan.model_axis)
+        row_spec, col_spec, state_spec = plan.closure_specs()
     else:
         row_spec = col_spec = state_spec = None
 
@@ -254,8 +248,6 @@ def opt_closure(
 
 def opt_step(T_packed: jnp.ndarray, tables: ProductionTables, n: int, plan=None):
     """One opt_closure iteration on packed state (roofline unit)."""
-    from jax.sharding import PartitionSpec as P
-
     b_idx = jnp.asarray(tables.b_idx, jnp.int32)
     c_idx = jnp.asarray(tables.c_idx, jnp.int32)
 
@@ -264,16 +256,14 @@ def opt_step(T_packed: jnp.ndarray, tables: ProductionTables, n: int, plan=None)
             jax.lax.with_sharding_constraint(x, spec)
         )
 
-    row = None
+    row_spec = col_spec = None
     if plan is not None:
-        row = (
-            (plan.pod_axis, plan.data_axis) if plan.pod_axis else plan.data_axis
-        )
+        row_spec, col_spec, _ = plan.closure_specs()
     # barrier: materialize the PACKED replicas before unpacking, so the
     # all-gathers move 1-bit words (XLA otherwise reorders the unpack ahead
     # of the resharding and gathers int8 - 8x the wire bytes)
-    row_copy = wsc(T_packed, P(None, row, None) if plan else None)
-    col_copy = wsc(T_packed, P(None, None, plan.model_axis) if plan else None)
+    row_copy = wsc(T_packed, row_spec)
+    col_copy = wsc(T_packed, col_spec)
     if plan is not None:
         row_copy, col_copy = jax.lax.optimization_barrier((row_copy, col_copy))
     lhs = _unpack_s8(row_copy, n)
@@ -472,6 +462,96 @@ def masked_bitpacked_closure(
         )  # (w,) packed columns reached from active rows
         M_next = M | unpack_bits(reach_w, n)
         Tp_next = Tp | new
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
+        return Tp_next, M_next, grew, overflow, it + 1
+
+    state = (Tp0, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    Tp, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return unpack_bits(Tp, n), M, overflow
+
+
+@partial(
+    jax.jit, static_argnames=("tables", "row_capacity", "max_iters", "plan")
+)
+def masked_opt_closure(
+    T: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    plan=None,
+):
+    """Source-restricted closure on the distributed packed-exchange path.
+
+    The sharded sibling of :func:`masked_bitpacked_closure`, built like
+    :func:`opt_closure`: the state stays uint32-packed across iterations,
+    and with a :class:`~repro.shard.plans.MeshPlan` the compacted R-row
+    active block is partitioned over the mesh row axis while packed words
+    shard over ``model`` (``MeshPlan.closure_specs``).  Each iteration
+    exchanges ONE pair of packed copies — the (N, R, w) row copy (the
+    collective is restricted to the active row shards, R·w words instead
+    of the all-pairs n·w) and the (N, n, w) column copy — then contracts
+    locally on the int8 MXU.  ``plan=None`` runs the identical math on a
+    single device.
+
+    Semantics match the other masked engines exactly: returns
+    ``(T, M, overflowed)``; bucket-growth warm restarts are monotone and
+    rows already at their fixpoint come back bit-identical regardless of
+    the mesh shape (tested in tests/test_distributed_masked.py).
+    """
+    n = T.shape[-1]
+    if tables.n_prods == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+    Tp0 = pack_bits(T)  # (N, n, w) uint32 — persistent state
+
+    if plan is not None:
+        row_spec, col_spec, state_spec = plan.closure_specs()
+    else:
+        row_spec = col_spec = state_spec = None
+
+    def wsc(x, spec):
+        return x if spec is None else jax.lax.with_sharding_constraint(x, spec)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        Tp, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], Tp[:, idx, :], 0)  # (N, R, w)
+        # packed exchange restricted to the active shard: a row copy of the
+        # COMPACTED block (rows sharded, all words) and a col copy of the
+        # full state (all rows, words sharded); bits on the wire.
+        row_copy = wsc(rows, row_spec)
+        col_copy = wsc(Tp, col_spec)
+        if plan is not None:
+            row_copy, col_copy = jax.lax.optimization_barrier(
+                (row_copy, col_copy)
+            )
+        lhs = _unpack_s8(row_copy, n)  # (N, R, n) int8, rows local
+        rhs = _unpack_s8(col_copy, n)  # (N, n, n) int8, cols local
+        prod = jax.lax.dot_general(
+            lhs[b_idx],
+            rhs[c_idx],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        ) > 0  # (P, R, n)
+        new_r = _scatter_or_bool(prod, tables) & valid[None, :, None]
+        # fill lanes carry zero words, so each target row has exactly one
+        # real contributor and the scatter-max is a plain scatter
+        new_p = wsc(pack_bits(new_r), row_spec)  # (N, R, w)
+        new = jnp.zeros_like(Tp).at[:, idx, :].max(new_p)
+        Tp_next = wsc(Tp | new, state_spec)
+        # columns reached from active rows -> new mask rows; reduced over
+        # the unpacked int8 copy (a plain any-reduction — the SPMD
+        # partitioner cannot shard the packed bitwise-or reduction)
+        M_next = M | jnp.any(lhs, axis=(0, 1))
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
         grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
         return Tp_next, M_next, grew, overflow, it + 1

@@ -261,6 +261,110 @@ def masked_frontier_single_path_closure(
 
 @partial(
     jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "plan"),
+)
+def masked_opt_single_path_closure(
+    L: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    plan=None,
+):
+    """Source-restricted single-path closure for the distributed ``opt``
+    engine: :func:`masked_single_path_closure` with the compacted R-row
+    block partitioned over the mesh row axis.
+
+    Lengths are f32 — there is no packed word layout to exchange — so the
+    "opt" treatment here is the operand-exchange hoist alone: per
+    iteration the compacted (N, R, n) active block is all-gathered ONCE
+    (an explicit replication constraint — R·n f32 words on the wire, the
+    f32 analog of the packed row exchange; XLA would otherwise reach the
+    same exchange through an involuntary full rematerialization), and the
+    two contraction operands slice locally from it: a row copy (R sharded
+    over the mesh row axis via
+    :meth:`~repro.shard.plans.MeshPlan.closure_specs`, columns replicated
+    within a mesh row — the lhs gather by ``idx`` stays local) and a
+    column copy (R replicated, columns sharded over ``model``).  The
+    min-plus contraction and the scatter back into L then run fully
+    locally, with the state L sharded over ``(row, model)``.
+    ``plan=None`` is the identical single-device math.
+
+    Freeze-on-first-discovery is preserved verbatim (candidates only land
+    where ``isfinite(L)`` just flipped), so frozen rows stay bit-identical
+    across warm restarts and mesh shapes; returns ``(L, M, overflowed)``.
+    """
+    from .closure import _active_rows, _masked_limit
+
+    n = L.shape[-1]
+    if tables.n_prods == 0:
+        return L, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    a_idx = jnp.asarray(tables.a_idx, jnp.int32)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(L, max_iters)
+
+    if plan is not None:
+        from jax.sharding import PartitionSpec
+
+        row_spec, col_spec, state_spec = plan.closure_specs()
+        repl_spec = PartitionSpec(None, None, None)
+    else:
+        row_spec = col_spec = state_spec = repl_spec = None
+
+    def wsc(x, spec):
+        return x if spec is None else jax.lax.with_sharding_constraint(x, spec)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        L, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        # ONE explicit exchange of the compacted block per iteration: the
+        # row copy needs all columns of its row shard and the col copy
+        # all rows of its column shard, so their union is the replicated
+        # block — annotate that all-gather explicitly (the partitioner
+        # would otherwise reach it via involuntary full rematerialization
+        # on the conflicting row/col constraints), then slice locally.
+        rows = wsc(
+            jnp.where(valid[None, :, None], L[:, idx, :], INF), repl_spec
+        )  # (N, R, n)
+        row_copy = wsc(rows, row_spec)
+        col_copy = wsc(rows, col_spec)
+        if plan is not None:
+            row_copy, col_copy = jax.lax.optimization_barrier(
+                (row_copy, col_copy)
+            )
+        # compact the contraction axis too: only rows in M can contribute;
+        # the idx column gather reads the row copy's replicated axis
+        lhs = jnp.where(
+            valid[None, None, :], row_copy[b_idx][:, :, idx], INF
+        )  # (P, R, R) — output rows sharded, contraction local
+        cand = _minplus(lhs, col_copy[c_idx])  # (P, R, n) (row, model)-sharded
+        cand_a = (
+            jnp.full((tables.n_nonterms, R, n), jnp.inf).at[a_idx].min(cand)
+        )
+        newly = jnp.isfinite(cand_a) & ~jnp.isfinite(rows)
+        # freeze-on-first-discovery: finite entries are never overwritten;
+        # fill lanes carry inf so the scatter-min is duplicate-safe
+        L_next = wsc(
+            L.at[:, idx, :].min(jnp.where(newly, cand_a, jnp.inf)), state_spec
+        )
+        M_next = M | jnp.any(jnp.isfinite(rows), axis=(0, 1))
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        grew = jnp.any(newly) | jnp.any(M_next & ~M)
+        return L_next, M_next, grew, overflow, it + 1
+
+    state = (L, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    L, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return L, M, overflow
+
+
+@partial(
+    jax.jit,
     static_argnames=("tables", "row_capacity", "ctx_capacity", "max_iters"),
 )
 def masked_single_path_repair_closure(

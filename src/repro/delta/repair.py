@@ -53,6 +53,27 @@ import numpy as np
 from repro.core.graph import EdgeDelta, Graph
 
 
+def localize_state(state_dev):
+    """Pull a mesh-sharded (multi-device) cached state back to one device.
+
+    The distributed ``opt`` backend caches states sharded over its mesh;
+    repair has no sharded variant — it is sized by the edit's blast
+    radius, not the graph, so it always runs the single-device path.  A
+    sharded state is therefore *evicted to the single-device path* here:
+    gathered through the host once, repaired locally, and re-sharded by
+    the next sharded query's executable.  Single-device states (including
+    everything on non-opt backends) pass through untouched.
+    """
+    import jax
+
+    if (
+        isinstance(state_dev, jax.Array)
+        and len(state_dev.sharding.device_set) > 1
+    ):
+        return jnp.asarray(np.asarray(state_dev))
+    return state_dev
+
+
 @dataclass
 class DeltaStats:
     """Repair counters, surfaced through ``QueryResult.stats``.
@@ -183,6 +204,7 @@ def _repair_rows(
     """
     stats = DeltaStats()
     mask = np.array(mask, copy=True)
+    state_dev = localize_state(state_dev)  # opt mesh states repair locally
 
     touched = plan.evict | plan.ins_sources
     dirty = False

@@ -15,10 +15,12 @@ Invariants
 ----------
 * **PlanKey identity.**  A compiled executable is a pure function of its
   :class:`PlanKey` — ``(tables, engine, n, row_capacity, repair,
-  ctx_capacity, semantics)`` — and of *nothing else*.  In particular it
-  never depends on graph data, so executables survive every delta (row
-  repair and full invalidation alike) and may be shared across engines
-  serving different graphs of the same padded size.
+  ctx_capacity, semantics, mesh)`` — and of *nothing else*.  In
+  particular it never depends on graph data, so executables survive every
+  delta (row repair and full invalidation alike) and may be shared across
+  engines serving different graphs of the same padded size.  ``mesh`` is
+  the device-mesh shape identity of sharded (``opt``) plans, ``()``
+  otherwise; the concrete mesh object is supplied at build time.
 * **Key aliasing is semantic.**  :func:`sp_engine_name` collapses keys
   exactly where the underlying closure function is shared (bitpacked
   single-path aliases to dense; the one single-path repair function keys
@@ -38,15 +40,22 @@ from repro.core import semantics as _semantics
 from repro.core.matrices import ProductionTables
 
 #: masked (source-restricted) closure per backend — the serving fast path.
+#: ``opt`` is the distributed packed-exchange engine: the only backend
+#: whose executables take a mesh identity (PlanKey.mesh) and shard the
+#: compacted row block; without a mesh it runs the same math one-device.
 MASKED_ENGINES = {
     "dense": _closure.masked_closure,
     "frontier": _closure.masked_frontier_closure,
     "bitpacked": _closure.masked_bitpacked_closure,
+    "opt": _closure.masked_opt_closure,
 }
 
 #: repair closure per backend — delta ingestion (frozen-row warm restart;
 #: the frontier backend shares the dense repair path: repair iterations are
-#: already delta-shaped, there is no second frontier to exploit).
+#: already delta-shaped, there is no second frontier to exploit).  The opt
+#: backend is deliberately absent: it has no sharded repair variant, and
+#: :func:`repair_engine_name` — the single source of truth for that
+#: routing — aliases its repair keys onto the bitpacked executable.
 REPAIR_ENGINES = {
     "dense": _closure.masked_repair_closure,
     "frontier": _closure.masked_repair_closure,
@@ -55,10 +64,12 @@ REPAIR_ENGINES = {
 
 #: masked single-path (length-annotated) closure per backend.  Lengths are
 #: f32 — there is no packed layout to exploit — so the bitpacked backend
-#: routes through the dense min-plus path (see :func:`sp_engine_name`).
+#: routes through the dense min-plus path (see :func:`sp_engine_name`);
+#: the opt backend shards the compacted min-plus row block over the mesh.
 SP_ENGINES = {
     "dense": _semantics.masked_single_path_closure,
     "frontier": _semantics.masked_frontier_single_path_closure,
+    "opt": _semantics.masked_opt_single_path_closure,
 }
 
 
@@ -67,10 +78,30 @@ def sp_engine_name(engine: str, repair: bool = False) -> str:
     collapse onto one compiled executable wherever the underlying function
     is shared: engines without a length-annotated variant (bitpacked)
     alias to dense, and the repair variant — one function serves every
-    backend — always keys as dense."""
+    backend — always keys as dense (repair runs single-device even for
+    the distributed opt backend)."""
     if repair:
         return "dense"
     return engine if engine in SP_ENGINES else "dense"
+
+
+def repair_engine_name(engine: str) -> str:
+    """Backend name to key Boolean repair plans under.  The opt backend
+    keys as ``bitpacked``: repair is sized by an edit's blast radius, not
+    by the graph, so it always runs the single-device packed path — the
+    PlanKey collapse makes the opt and bitpacked backends share one
+    compiled repair executable (and keeps ``mesh`` out of repair keys)."""
+    return "bitpacked" if engine == "opt" else engine
+
+
+def mesh_key_of(mesh) -> tuple:
+    """:attr:`PlanKey.mesh` identity of a ``jax.sharding.Mesh`` — the
+    ``(axis_name, size)`` pairs, ``()`` for ``None`` (single device)."""
+    if mesh is None:
+        return ()
+    return tuple(
+        (str(a), int(s)) for a, s in zip(mesh.axis_names, mesh.devices.shape)
+    )
 
 
 def row_buckets(n: int) -> list[int]:
@@ -105,6 +136,12 @@ class PlanKey:
     run on the (N, n, n) bool matrix, ``"single_path"`` ones on the
     (N, n, n) f32 length matrix (isfinite == the Boolean closure), with
     otherwise identical signatures.
+    ``mesh`` is the mesh identity for sharded (``opt``) executables — the
+    ``(axis_name, size)`` tuple of the device mesh the plan partitions
+    over, ``()`` for single-device plans.  Two engines sharing a plans
+    cache reuse an executable only when their mesh shapes agree; the
+    concrete device assignment is supplied at build time
+    (:meth:`CompiledClosureCache.get`), not part of the identity.
     """
 
     tables: ProductionTables
@@ -114,6 +151,7 @@ class PlanKey:
     repair: bool = False
     ctx_capacity: int = 0
     semantics: str = "relational"
+    mesh: tuple = ()
 
 
 @dataclass
@@ -143,16 +181,37 @@ class CompiledClosureCache:
     def __len__(self) -> int:
         return len(self._exe)
 
-    def get(self, key: PlanKey):
+    def get(self, key: PlanKey, mesh=None):
+        """Executable for ``key``.  Sharded keys (``key.mesh != ()``) need
+        the concrete ``jax.sharding.Mesh`` on a cache miss — the mesh
+        carries the device assignment, the key only its shape identity."""
         exe = self._exe.get(key)
         if exe is None:
             self.stats.compile_misses += 1
-            exe = self._exe[key] = self._build(key)
+            exe = self._exe[key] = self._build(key, mesh)
         else:
             self.stats.compile_hits += 1
         return exe
 
-    def _build(self, key: PlanKey):
+    def _lower_ctx(self, key: PlanKey, mesh):
+        """(mesh context manager, MeshPlan-or-None) for lowering ``key``:
+        sharded opt executables trace their ``with_sharding_constraint``
+        specs against the ambient mesh."""
+        import contextlib
+
+        if not key.mesh:
+            return contextlib.nullcontext(), None
+        if mesh is None or mesh_key_of(mesh) != key.mesh:
+            raise ValueError(
+                f"PlanKey has mesh identity {key.mesh} but got "
+                f"{'no mesh' if mesh is None else mesh_key_of(mesh)}"
+            )
+        from repro.shard.plans import MeshPlan
+
+        return mesh, MeshPlan.from_mesh(mesh)
+
+    def _build(self, key: PlanKey, mesh=None):
+        ctx, plan = self._lower_ctx(key, mesh)
         m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
         if key.semantics == "single_path":
             L = jax.ShapeDtypeStruct(
@@ -166,9 +225,11 @@ class CompiledClosureCache:
                     L, key.tables, m, m, **kw
                 ).compile()
             fn = SP_ENGINES[key.engine]
-            return fn.lower(
-                L, key.tables, m, row_capacity=key.row_capacity
-            ).compile()
+            kw = {"row_capacity": key.row_capacity}
+            if key.engine == "opt":
+                kw["plan"] = plan
+            with ctx:
+                return fn.lower(L, key.tables, m, **kw).compile()
         T = jax.ShapeDtypeStruct(
             (key.tables.n_nonterms, key.n, key.n), jnp.bool_
         )
@@ -179,6 +240,8 @@ class CompiledClosureCache:
                 kw["ctx_capacity"] = key.ctx_capacity
             return fn.lower(T, key.tables, m, m, **kw).compile()
         fn = MASKED_ENGINES[key.engine]
-        return fn.lower(
-            T, key.tables, m, row_capacity=key.row_capacity
-        ).compile()
+        kw = {"row_capacity": key.row_capacity}
+        if key.engine == "opt":
+            kw["plan"] = plan
+        with ctx:
+            return fn.lower(T, key.tables, m, **kw).compile()

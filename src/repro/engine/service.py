@@ -38,6 +38,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +53,7 @@ from repro.core.matrices import (
 from repro.core.semantics import PathExtractor, base_lengths
 from repro.delta.repair import (
     DeltaStats,
+    localize_state,
     plan_repair,
     repair_single_path_state,
     repair_state,
@@ -63,6 +65,8 @@ from .plan import (
     CompiledClosureCache,
     PlanKey,
     bucket_for,
+    mesh_key_of,
+    repair_engine_name,
     sp_engine_name,
 )
 
@@ -130,14 +134,32 @@ class QueryEngine:
         engine: str = "dense",
         plans: CompiledClosureCache | None = None,
         row_capacity: int = 128,
+        mesh=None,
     ) -> None:
         if engine not in MASKED_ENGINES:
             raise ValueError(
                 f"unknown engine {engine!r}; pick one of "
                 f"{sorted(MASKED_ENGINES)}"
             )
+        if mesh is not None and engine != "opt":
+            raise ValueError(
+                f"mesh sharding is only supported by the 'opt' engine, "
+                f"not {engine!r}"
+            )
+        if mesh is not None and not {"data", "model"} <= set(mesh.axis_names):
+            # fail fast with an actionable message — MeshPlan.from_mesh
+            # would otherwise KeyError deep inside the first plan compile
+            raise ValueError(
+                "opt mesh must name 'data' and 'model' axes "
+                f"(got {tuple(mesh.axis_names)})"
+            )
         self.graph = graph
         self.engine = engine
+        # Device mesh for the distributed opt backend: masked closures
+        # shard the compacted row block over it (PlanKey carries its shape
+        # identity); None runs the same packed math on one device.
+        self.mesh = mesh
+        self._mesh_key = mesh_key_of(mesh)
         self.plans = plans if plans is not None else CompiledClosureCache()
         self.row_capacity = row_capacity
         self.n = padded_size(graph.n_nodes)
@@ -358,6 +380,27 @@ class QueryEngine:
             need[list(q.sources)] = True
         return need
 
+    def _place_state(self, T, sharded: bool):
+        """Match a cached state's placement to the executable consuming it.
+
+        Sharded (opt-with-mesh) executables expect the state spread over
+        the mesh: a state committed elsewhere (e.g. localized by a repair)
+        is pulled through the host and handed over uncommitted — the
+        executable re-places it under its own sharding.  Single-device
+        executables (every repair, or opt without a mesh) get a
+        mesh-sharded state localized by the one shared helper
+        (:func:`repro.delta.repair.localize_state`; repair entrypoints
+        have usually done this already).  Either way the round-trip only
+        happens when placement actually changes.
+        """
+        if self.mesh is None or not isinstance(T, jax.Array):
+            return T
+        if not sharded:
+            return localize_state(T)
+        if T.sharding.device_set != set(self.mesh.devices.flat):
+            return np.asarray(T)
+        return T
+
     def _run_fixpoint(
         self,
         tables: ProductionTables,
@@ -373,25 +416,34 @@ class QueryEngine:
         so capacity tracks the edit's blast radius, not the cache size.
         ``semantics="single_path"`` runs the length-annotated closures on
         the f32 state instead (same signatures, same bucket ladder).
+        With a mesh (opt backend) the non-repair executables are sharded —
+        repair always runs the single-device path, so sharded states are
+        localized first and re-shard on the next query.
         Returns ``(T_device, M_host, n_calls)``."""
         mask = np.asarray(seed)
         repair = frozen is not None
         single_path = semantics == "single_path"
-        eng_name = (
-            sp_engine_name(self.engine, repair=repair)
-            if single_path
-            else self.engine
-        )
+        if single_path:
+            eng_name = sp_engine_name(self.engine, repair=repair)
+        elif repair:
+            eng_name = repair_engine_name(self.engine)
+        else:
+            eng_name = self.engine
+        # every repair executable is single-device; only the masked opt
+        # query path carries the mesh identity
+        mesh_k = self._mesh_key if (not repair and eng_name == "opt") else ()
+        T = self._place_state(T, sharded=bool(mesh_k))
         n_frozen = 0
         cap_c = 0
         if repair:
             frozen_dev = jnp.asarray(frozen)
             n_frozen = int(np.asarray(frozen).sum())
         cap = bucket_for(max(self.row_capacity, int(mask.sum())), self.n)
-        if repair and (single_path or self.engine != "bitpacked"):
+        if repair and (single_path or eng_name != "bitpacked"):
             # dense/frontier (and every single-path) repair compacts the
             # contraction axis over active + frozen rows; the Boolean
-            # bitpacked repair contracts full packed words instead
+            # bitpacked repair (also serving opt) contracts full packed
+            # words instead
             cap_c = bucket_for(max(cap, int(mask.sum()) + n_frozen), self.n)
         calls = 0
         while True:
@@ -404,7 +456,9 @@ class QueryEngine:
                     repair=repair,
                     ctx_capacity=cap_c,
                     semantics=semantics,
-                )
+                    mesh=mesh_k,
+                ),
+                mesh=self.mesh,
             )
             if repair:
                 T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)

@@ -65,6 +65,20 @@ class MeshPlan:
         """FSDP shards a param dim over 'data' only when divisible."""
         return self.data_axis if size % self.data_size == 0 else None
 
+    def closure_specs(self) -> tuple[P, P, P]:
+        """Packed-exchange sharding of the CFPQ closure engines
+        (core/closure.py ``opt_closure`` / ``masked_opt_closure``):
+        ``(row_spec, col_spec, state_spec)`` for a ``(|N|, rows, cols)``
+        operand — the (compacted) row block shards over the mesh row axis
+        (``(pod, data)`` or ``data``), columns/packed words over ``model``,
+        and the persistent state over both."""
+        row = self.batch
+        return (
+            P(None, row, None),  # row copy: rows sharded, cols replicated
+            P(None, None, self.model_axis),  # col copy: cols sharded
+            P(None, row, self.model_axis),  # persistent state: both
+        )
+
     def tp_dim(self, size: int):
         return self.model_axis if size % self.model_size == 0 else None
 

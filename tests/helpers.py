@@ -105,3 +105,62 @@ def random_graph(rng: np.random.Generator, n_nodes=6, n_edges=12, n_t=2):
         t = rng.integers(0, n_t)
         edges.append((int(i), f"t{t}", int(j)))
     return Graph(n_nodes, edges)
+
+
+def masked_oracle_run(
+    T0,
+    tables,
+    src_mask,
+    mesh_shape: tuple[int, int] | None = None,
+    row_capacity: int = 128,
+    single_path: bool = False,
+    max_restarts: int = 20,
+):
+    """Mesh-parametrized oracle runner for the distributed (`opt`) masked
+    closures: runs ``masked_opt_closure`` (or, with ``single_path=True``,
+    ``masked_opt_single_path_closure`` on the f32 state ``T0``) under a
+    host-device mesh of shape ``(data, model)`` — ``None`` runs the same
+    math without a mesh plan — re-entering on overflow with a doubled row
+    capacity exactly like the engine's bucket ladder does.
+
+    Returns ``(state, mask, snapshots)`` as NumPy arrays, where
+    ``snapshots`` is the list of per-call ``(state, mask)`` pairs (one per
+    warm restart, final included) so callers can assert restart
+    invariants: the fixpoint is monotone, and already-converged entries —
+    Boolean rows / finite single-path lengths — come back bit-identical
+    from every re-entry regardless of the mesh shape.
+    """
+    import contextlib
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.closure import masked_opt_closure
+    from repro.core.semantics import masked_opt_single_path_closure
+    from repro.shard.plans import MeshPlan
+
+    if mesh_shape is not None:
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+        plan = MeshPlan.from_mesh(mesh)
+        ctx = mesh
+    else:
+        plan, ctx = None, contextlib.nullcontext()
+    fn = masked_opt_single_path_closure if single_path else masked_opt_closure
+    n = T0.shape[-1]
+    state, mask = T0, jnp.asarray(src_mask)
+    cap = min(row_capacity, n)
+    snapshots = []
+    for _ in range(max_restarts):
+        with ctx:
+            state, mask, overflow = fn(
+                state, tables, mask, row_capacity=cap, plan=plan
+            )
+        snapshots.append((np.asarray(state), np.asarray(mask)))
+        if not bool(overflow):
+            return np.asarray(state), np.asarray(mask), snapshots
+        # grow to the power-of-two bucket covering the overflowing active
+        # set (like the engine's ladder — and it bounds the number of
+        # distinct row_capacity values that get traced/compiled)
+        needed = max(int(snapshots[-1][1].sum()), 2 * cap, 2)
+        cap = min(n, 1 << int(np.ceil(np.log2(needed))))
+    raise AssertionError(f"no fixpoint within {max_restarts} restarts")

@@ -320,6 +320,48 @@ def test_differential_single_path_interleaving(engine):
             assert_path_witness(graph, g, "S", i, j, path, length=ann)
 
 
+def test_sharded_state_repair_evict_mechanics():
+    """Delta mechanics on a mesh-backed opt engine (both semantics): an
+    insert repairs the cached sharded states in place through the
+    single-device repair path (next query is a pure *hit* matching
+    scratch), a delete evicts ancestor rows (*warm* recompute re-shards
+    the state), and witnesses stay oracle-valid throughout.  Runs on a
+    1x1 host mesh; the write/read interleaving differential across real
+    multi-device meshes is
+    tests/test_distributed_masked.py::test_sharded_engine_delta_interleaving
+    (whose 1x1 case also runs under tier-1)."""
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = query1_grammar().to_cnf()
+    graph = ontology_graph(30, 60, seed=1)
+    eng = QueryEngine(graph, engine="opt", mesh=mesh)
+    src = (0, 3, 7)
+    eng.query(Query(g, "S", sources=src))
+    eng.query(Query(g, "S", sources=src, semantics="single_path"))
+
+    st = eng.apply_delta(
+        insert=[(0, "type", 5), (5, "subClassOf", 3), (9, "type_r", 2)]
+    )
+    assert st.rows_repaired > 0 and st.repair_iters >= 1
+    r = eng.query(Query(g, "S", sources=src))
+    assert r.stats["cache"] == "hit"  # repaired in place, not dropped
+    assert r.pairs == _pairs_for(graph, g, src)
+    r_sp = eng.query(Query(g, "S", sources=src, semantics="single_path"))
+    assert r_sp.stats["cache"] == "hit" and r_sp.pairs == r.pairs
+
+    victim = next(e for e in graph.edges if e[0] == 0)  # evicts a src row
+    st2 = eng.apply_delta(delete=[victim])
+    assert st2.rows_evicted > 0
+    r2 = eng.query(Query(g, "S", sources=src))
+    assert r2.stats["cache"] == "warm"  # evicted rows recompute + re-shard
+    assert r2.pairs == _pairs_for(graph, g, src)
+    r2_sp = eng.query(Query(g, "S", sources=src, semantics="single_path"))
+    assert r2_sp.pairs == r2.pairs
+    for (i, j), path in r2_sp.paths.items():
+        assert_path_witness(graph, g, "S", i, j, path)
+
+
 # ---------------------------------------------------------------------- #
 # Edge-log compaction (core/graph.py)
 # ---------------------------------------------------------------------- #

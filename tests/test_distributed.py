@@ -1,12 +1,20 @@
 """Multi-device correctness, run in a subprocess with 8 host-platform
-devices (tests in the main process must keep seeing 1 device)."""
+devices (tests in the main process must keep seeing 1 device).
+
+The CFPQ closure matrix — (relational | single_path) x (all-pairs |
+masked) — is parametrized so a regression in any one combination on a
+mesh fails as its own test instead of hiding behind the first assert of
+a monolithic driver.  The in-process (and far larger) differential suite
+for the masked opt engines is tests/test_distributed_masked.py, which the
+dedicated multi-device CI lane runs with 8 host devices.
+"""
 import os
 import subprocess
 import sys
 
 import pytest
 
-DRIVER = r"""
+_PRELUDE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
@@ -20,18 +28,30 @@ from repro.core import closure
 from repro.core.grammar import query1_grammar
 from repro.core.graph import ontology_graph
 from repro.core.matrices import ProductionTables, init_matrix
+from repro.core.semantics import (
+    base_lengths,
+    masked_single_path_closure,
+    masked_opt_single_path_closure,
+    single_path_closure,
+)
 from repro.launch.mesh import make_test_mesh
+from repro.shard.plans import MeshPlan
 
-# ------------------------------------------------------------------ #
-# 1. Distributed CFPQ closure == single-device closure (pjit, 2D mesh)
-# ------------------------------------------------------------------ #
 g = query1_grammar().to_cnf()
 graph = ontology_graph(40, 90, seed=7)
 tables = ProductionTables.from_grammar(g)
 T0 = init_matrix(graph, g)
-
+n = T0.shape[-1]
 ref = np.asarray(closure.dense_closure(T0, tables))
+"""
 
+#: per-(semantics, masked) driver bodies; each asserts sharded == the
+#: single-device reference on a 4x2 mesh (plus 2x1 for the masked opt
+#: engines, whose row sharding is the tentpole contract)
+_CLOSURE_BODIES = {
+    # all-pairs Boolean: the generic GSPMD engines AND the packed-exchange
+    # opt engine must reproduce the dense single-device closure
+    ("relational", False): r"""
 mesh = make_test_mesh(4, 2)
 spec = NamedSharding(mesh, P(None, "data", "model"))
 T0_sharded = jax.device_put(T0, spec)
@@ -44,7 +64,6 @@ with mesh:
 np.testing.assert_array_equal(np.asarray(dist), ref)
 print("distributed closure OK")
 
-# frontier engine distributed too
 with mesh:
     distf = jax.jit(
         lambda t: closure.frontier_closure(t, tables),
@@ -53,6 +72,100 @@ with mesh:
     )(T0_sharded)
 np.testing.assert_array_equal(np.asarray(distf), ref)
 print("distributed frontier closure OK")
+
+plan = MeshPlan.from_mesh(mesh)
+with mesh:
+    disto = closure.opt_closure(T0, tables, plan=plan)
+np.testing.assert_array_equal(np.asarray(disto), ref)
+print("distributed opt closure OK")
+""",
+    # masked Boolean: the sharded opt engine's rows under its mask are
+    # bit-identical to the single-device masked closure's
+    ("relational", True): r"""
+src = np.zeros(n, bool)
+src[[0, 5, 17]] = True
+refT, refM, ovf = closure.masked_closure(
+    T0, tables, jnp.asarray(src), row_capacity=n
+)
+assert not bool(ovf)
+refT, refM = np.asarray(refT), np.asarray(refM)
+np.testing.assert_array_equal(refT[:, refM, :], ref[:, refM, :])
+for shape in [(2, 1), (4, 2)]:
+    mesh = make_test_mesh(*shape)
+    plan = MeshPlan.from_mesh(mesh)
+    with mesh:
+        T, M, ovf = closure.masked_opt_closure(
+            T0, tables, jnp.asarray(src), row_capacity=n, plan=plan
+        )
+    assert not bool(ovf)
+    np.testing.assert_array_equal(np.asarray(M), refM)
+    np.testing.assert_array_equal(np.asarray(T)[:, refM, :], refT[:, refM, :])
+    print(f"distributed masked opt closure OK {shape}")
+""",
+    # all-pairs single-path: the Section 5 closure under GSPMD sharding
+    # reproduces the single-device lengths bit-for-bit (deterministic
+    # discovery order; f32 sums of small ints are exact)
+    ("single_path", False): r"""
+refT2, refL = single_path_closure(T0, tables)
+refT2, refL = np.asarray(refT2), np.asarray(refL)
+np.testing.assert_array_equal(refT2, ref)
+mesh = make_test_mesh(4, 2)
+spec = NamedSharding(mesh, P(None, "data", "model"))
+T0_sharded = jax.device_put(T0, spec)
+with mesh:
+    dT, dL = jax.jit(
+        lambda t: single_path_closure(t, tables),
+        in_shardings=spec,
+        out_shardings=(spec, spec),
+    )(T0_sharded)
+np.testing.assert_array_equal(np.asarray(dT), refT2)
+np.testing.assert_array_equal(np.asarray(dL), refL)
+print("distributed single-path closure OK")
+""",
+    # masked single-path: sharded opt lengths — support matches the
+    # Boolean masked rows, finite entries stay frozen across mesh shapes
+    ("single_path", True): r"""
+src = np.zeros(n, bool)
+src[[0, 5, 17]] = True
+refT, refM, _ = closure.masked_closure(
+    T0, tables, jnp.asarray(src), row_capacity=n
+)
+refT, refM = np.asarray(refT), np.asarray(refM)
+refL, refML, ovf = masked_single_path_closure(
+    base_lengths(T0), tables, jnp.asarray(src), row_capacity=n
+)
+assert not bool(ovf)
+for shape in [(2, 1), (4, 2)]:
+    mesh = make_test_mesh(*shape)
+    plan = MeshPlan.from_mesh(mesh)
+    with mesh:
+        L, M, ovf = masked_opt_single_path_closure(
+            base_lengths(T0), tables, jnp.asarray(src),
+            row_capacity=n, plan=plan,
+        )
+    assert not bool(ovf)
+    L, M = np.asarray(L), np.asarray(M)
+    np.testing.assert_array_equal(M, refM)
+    np.testing.assert_array_equal(np.isfinite(L)[:, M, :], refT[:, M, :])
+    print(f"distributed masked opt single-path OK {shape}")
+""",
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("semantics", ["relational", "single_path"])
+@pytest.mark.parametrize("masked", [False, True], ids=["allpairs", "masked"])
+def test_distributed_closure(semantics, masked):
+    driver = (
+        _PRELUDE
+        + _CLOSURE_BODIES[(semantics, masked)]
+        + "\nprint('CLOSURE CASE PASSED')\n"
+    )
+    _run_driver(driver, "CLOSURE CASE PASSED")
+
+
+DRIVER = _PRELUDE + r"""
+mesh = make_test_mesh(4, 2)
 
 # ------------------------------------------------------------------ #
 # 2. Distributed LM train step: sharded == replicated result
@@ -149,17 +262,21 @@ print("ALL DISTRIBUTED TESTS PASSED")
 """
 
 
-@pytest.mark.slow
-def test_distributed_suite():
+def _run_driver(driver: str, sentinel: str) -> None:
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run(
-        [sys.executable, "-c", DRIVER],
+        [sys.executable, "-c", driver],
         env=env,
         capture_output=True,
         text=True,
         timeout=900,
     )
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
-    assert "ALL DISTRIBUTED TESTS PASSED" in proc.stdout
+    assert sentinel in proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_suite():
+    _run_driver(DRIVER, "ALL DISTRIBUTED TESTS PASSED")

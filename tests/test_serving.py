@@ -149,6 +149,42 @@ def test_routes_split_by_semantics():
     asyncio.run(main())
 
 
+def test_opt_backend_serving_smoke():
+    """CFPQServer fronting a distributed-opt QueryEngine: coalesced reads
+    on both semantics plus a fenced write serve correct results through
+    the packed-exchange closures.  Runs mesh-free here (one device, the
+    identical math); the mesh-backed engine is exercised by
+    tests/test_distributed_masked.py in the multi-device CI lane."""
+
+    async def main():
+        graph = ontology_graph(20, 40, seed=0)
+        g = query1_grammar().to_cnf()
+        eng = QueryEngine(graph, engine="opt")
+        ref = evaluate_relational(graph, g, "S")
+        cfg = ServeConfig(max_batch=4, batch_window_s=0.005)
+        async with CFPQServer(eng, cfg) as srv:
+            rs = await asyncio.gather(
+                *[srv.submit(Query(g, "S", sources=(m,))) for m in range(3)],
+                srv.submit(
+                    Query(g, "S", sources=(1,), semantics="single_path")
+                ),
+            )
+            await srv.apply_delta(insert=[(0, "type", 3)])  # fenced write
+            r2 = await srv.submit(Query(g, "S", sources=(0,)))
+        assert all(r.stats["engine"] == "opt" for r in rs)
+        for r in rs[:3]:
+            (m,) = r.query.sources
+            assert r.pairs == {(i, j) for (i, j) in ref if i == m}
+        assert rs[3].paths is not None and rs[3].pairs == rs[1].pairs
+        for (i, j), path in rs[3].paths.items():
+            assert_path_witness(graph, g, "S", i, j, path)
+        ref2 = evaluate_relational(graph, g, "S")  # post-delta oracle
+        assert r2.pairs == {(i, j) for (i, j) in ref2 if i == 0}
+        assert r2.stats["epoch"] == 1
+
+    asyncio.run(main())
+
+
 def test_admission_sheds_with_overloaded():
     async def main():
         _, g, _, srv = _setup(
