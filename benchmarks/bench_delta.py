@@ -30,7 +30,12 @@ import numpy as np
 
 from repro.core.grammar import Grammar
 from repro.core.graph import Graph
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.engine.plan import MASKED_ENGINES
 
 from .bench_engine import COMMUNITY, GRAMMAR, community_graph
@@ -86,7 +91,7 @@ def bench_size(
     def scenario(record: dict | None) -> None:
         # --- incremental path: one long-lived engine, repaired in place ---
         graph_r = Graph(base.n_nodes, list(base.edges))
-        eng = QueryEngine(graph_r, engine=engine, plans=plans)
+        eng = QueryEngine(graph_r, plans=plans, config=EngineConfig(engine=engine))
         eng.query_batch(queries)  # warm the materialized closure
         st, repair_s = _time(lambda: eng.apply_delta(insert=list(inserts)))
         rs = eng.query_batch(queries)
@@ -96,13 +101,13 @@ def bench_size(
         # --- drop path: fresh engine on the same mutated graph ---
         graph_d = Graph(base.n_nodes, list(base.edges))
         graph_d.insert_edges(list(inserts))
-        cold = QueryEngine(graph_d, engine=engine, plans=plans)
+        cold = QueryEngine(graph_d, plans=plans, config=EngineConfig(engine=engine))
         rs_cold, recompute_s = _time(lambda: cold.query_batch(queries))
 
         for a, b in zip(rs, rs_cold):  # differential: identical answers
             assert a.pairs == b.pairs, f"repair mismatch at n={n}"
         graph_d.delete_edges(list(deletes))
-        cold2 = QueryEngine(graph_d, engine=engine, plans=plans)
+        cold2 = QueryEngine(graph_d, plans=plans, config=EngineConfig(engine=engine))
         for a, b in zip(rs_del, cold2.query_batch(queries)):
             assert a.pairs == b.pairs, f"evict mismatch at n={n}"
         if record is not None:

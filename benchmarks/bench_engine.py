@@ -37,7 +37,12 @@ from repro.core.grammar import Grammar
 from repro.core.graph import Graph
 from repro.core.matrices import ProductionTables, init_matrix
 from repro.core.semantics import closure_engines
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.engine.plan import MASKED_ENGINES
 
 #: same-generation query over a class hierarchy (paper Query 1 shape,
@@ -130,13 +135,13 @@ def bench_mesh_size(
 
     timings: dict[str, tuple[float, float]] = {}
     results: dict[str, list] = {}
-    for label, kw in (
-        ("masked_opt", {"engine": "opt", "mesh": mesh}),
-        ("masked", {"engine": "dense"}),
+    for label, cfg in (
+        ("masked_opt", EngineConfig(engine="opt", mesh=mesh)),
+        ("masked", EngineConfig(engine="dense")),
     ):
         plans = CompiledClosureCache()
-        QueryEngine(graph, plans=plans, **kw).query_batch(queries)  # warm
-        eng = QueryEngine(graph, plans=plans, **kw)
+        QueryEngine(graph, plans=plans, config=cfg).query_batch(queries)  # warm
+        eng = QueryEngine(graph, plans=plans, config=cfg)
         rs, miss_s = _time(lambda: eng.query_batch(queries))
         _, hit_s = _time(lambda: eng.query_batch(queries))
         timings[label] = (miss_s, hit_s)
@@ -198,8 +203,8 @@ def bench_size(n: int, engine: str, n_sources: int) -> dict:
     # populate the plan cache (compile) with a throwaway engine instance,
     # then time a fresh instance sharing the warm plans: the measured miss
     # is pure closure work, no tracing/compilation
-    QueryEngine(graph, engine=engine, plans=plans).query_batch(queries)
-    eng = QueryEngine(graph, engine=engine, plans=plans)
+    QueryEngine(graph, plans=plans, config=EngineConfig(engine=engine)).query_batch(queries)
+    eng = QueryEngine(graph, plans=plans, config=EngineConfig(engine=engine))
     rs, batch_miss_s = _time(lambda: eng.query_batch(queries))
     _, batch_hit_s = _time(lambda: eng.query_batch(queries))
 
@@ -242,7 +247,8 @@ def bench_retrace(n: int, engine: str) -> dict:
     for label, cap0 in (("cap128", 128), ("capn", n)):
         plans = CompiledClosureCache()
         eng = QueryEngine(
-            graph, engine=engine, plans=plans, row_capacity=cap0
+            graph, plans=plans,
+            config=EngineConfig(engine=engine, row_capacity=cap0),
         )
         r, cold_s = _time(
             lambda: eng.query(Query(g, "S", sources=sources))

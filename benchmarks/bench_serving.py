@@ -36,11 +36,21 @@ import numpy as np
 
 from repro.core.grammar import Grammar
 from repro.core.graph import Graph
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.serve import ServeConfig, drive_open_loop, poisson_arrivals
 
 GRAMMAR = "S -> up S down | up down"
 COMMUNITY = 8  # nodes per chain community (bounds each query's reach)
+
+# the coalescing gate compares submission policies with the executable
+# held fixed — engine pinned to dense so planner routing (benchmarked in
+# bench_planner.py) can't move the baseline
+_ENGINE = EngineConfig(engine="dense")
 
 
 def chain_communities(n: int) -> Graph:
@@ -91,12 +101,12 @@ def bench_coalescing(
 
     # populate the shared plan cache untimed (the sequential pattern walks
     # every capacity bucket both trials will use)
-    warm = QueryEngine(graph, plans=plans)
+    warm = QueryEngine(graph, plans=plans, config=_ENGINE)
     for q in workload:
         warm.query(q)
 
     def trial(mb: int, window_s: float) -> dict:
-        eng = QueryEngine(graph, plans=plans)
+        eng = QueryEngine(graph, plans=plans, config=_ENGINE)
         cfg = ServeConfig(
             max_batch=mb, batch_window_s=window_s, max_queue_depth=4096
         )
@@ -130,13 +140,13 @@ def bench_window_sweep(
     workload = [Query(g, "S", sources=(s,)) for s in hot]
     arrivals = poisson_arrivals(n_requests, qps, rng)
 
-    warm = QueryEngine(graph, plans=plans)
+    warm = QueryEngine(graph, plans=plans, config=_ENGINE)
     for q in workload:
         warm.query(q)
 
     out = []
     for w_ms in windows_ms:
-        eng = QueryEngine(graph, plans=plans)
+        eng = QueryEngine(graph, plans=plans, config=_ENGINE)
         # re-materialize every distinct hot community untimed so the
         # timed run is all cache hits, whatever order the workload draws
         for c in range(4):

@@ -41,7 +41,12 @@ from repro.core.grammar import Grammar
 from repro.core.graph import Graph
 from repro.core.matrices import ProductionTables, init_matrix
 from repro.core.semantics import PathExtractor, single_path_closure
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.engine.plan import MASKED_ENGINES
 
 from .bench_delta import _edit_batch
@@ -93,8 +98,8 @@ def bench_size(
         out["allpairs_s"] = round(allpairs_memo[n], 4)
 
     # --- masked batch through the service (warm plans, fresh state) ---
-    QueryEngine(base, engine=engine, plans=plans).query_batch(queries)
-    eng = QueryEngine(base, engine=engine, plans=plans)
+    QueryEngine(base, plans=plans, config=EngineConfig(engine=engine)).query_batch(queries)
+    eng = QueryEngine(base, plans=plans, config=EngineConfig(engine=engine))
     rs, batch_miss_s = _time(lambda: eng.query_batch(queries))
     _, batch_hit_s = _time(lambda: eng.query_batch(queries))
     n_paths = sum(len(r.paths) for r in rs)
@@ -134,14 +139,14 @@ def bench_size(
 
     def scenario(record: dict | None) -> None:
         graph_r = Graph(base.n_nodes, list(base.edges))
-        eng_r = QueryEngine(graph_r, engine=engine, plans=plans)
+        eng_r = QueryEngine(graph_r, plans=plans, config=EngineConfig(engine=engine))
         eng_r.query_batch(queries)  # warm the materialized length state
         st, repair_s = _time(lambda: eng_r.apply_delta(insert=list(inserts)))
         rs_r = eng_r.query_batch(queries)
 
         graph_d = Graph(base.n_nodes, list(base.edges))
         graph_d.insert_edges(list(inserts))
-        cold = QueryEngine(graph_d, engine=engine, plans=plans)
+        cold = QueryEngine(graph_d, plans=plans, config=EngineConfig(engine=engine))
         rs_c, recompute_s = _time(lambda: cold.query_batch(queries))
         for a, b in zip(rs_r, rs_c):  # differential: identical pair sets
             assert a.pairs == b.pairs, f"single-path repair mismatch n={n}"

@@ -31,13 +31,13 @@ import numpy as np
 
 from repro.core.grammar import query1_grammar, query2_grammar
 from repro.core.graph import ontology_graph
-from repro.engine import Query, QueryEngine
+from repro.engine import EngineConfig, Query, QueryEngine
 from repro.serve import ServeConfig, drive_open_loop, poisson_arrivals
 
 
 async def run_async(args, graph, workload) -> None:
     """Open-loop async serving: Poisson arrivals through CFPQServer."""
-    eng = QueryEngine(graph, engine=args.engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=args.engine))
     cfg = ServeConfig(
         max_batch=args.batch,
         batch_window_s=args.window,
@@ -77,7 +77,7 @@ def main() -> None:
     ap.add_argument("--instances", type=int, default=280)
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--engine", default="dense")
+    ap.add_argument("--engine", default="auto")
     ap.add_argument("--path-frac", type=float, default=0.25,
                     help="fraction of requests served with single-path "
                          "semantics (witness paths)")
@@ -118,7 +118,7 @@ def main() -> None:
         asyncio.run(run_async(args, graph, workload))
         return
 
-    eng = QueryEngine(graph, engine=args.engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=args.engine))
     lat: dict[tuple[str, str], list[float]] = {}
     n_pairs = n_witnesses = 0
     t0 = time.perf_counter()

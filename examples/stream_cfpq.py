@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.grammar import query1_grammar, query2_grammar
 from repro.core.graph import ontology_graph
-from repro.engine import Query, QueryEngine
+from repro.engine import EngineConfig, Query, QueryEngine
 
 
 def main() -> None:
@@ -43,7 +43,7 @@ def main() -> None:
     ap.add_argument("--path-frac", type=float, default=0.25,
                     help="fraction of reads served with single-path "
                          "semantics (witness paths)")
-    ap.add_argument("--engine", default="dense")
+    ap.add_argument("--engine", default="auto")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,7 +53,7 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     hot = rng.integers(0, graph.n_nodes, size=8)
 
-    eng = QueryEngine(graph, engine=args.engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=args.engine))
     read_lat: dict[tuple[str, str], list[float]] = {}
     write_lat: list[float] = []
     n_pairs = n_reads = n_writes = n_witnesses = 0

@@ -74,6 +74,26 @@ def localize_state(state_dev):
     return state_dev
 
 
+def placement_of(state_dev) -> str:
+    """Placement tag of a cached closure state: ``"sharded"`` when it
+    lives spread over >1 device, ``"local"`` otherwise.
+
+    The engine records this in its per-grammar state metadata after every
+    closure run *and* after every repair (which localizes sharded states
+    via :func:`localize_state`) — it is a planner feature: consuming a
+    state away from where it lives costs a host round-trip, which the
+    cost model charges as a "move".
+    """
+    import jax
+
+    if (
+        isinstance(state_dev, jax.Array)
+        and len(state_dev.sharding.device_set) > 1
+    ):
+        return "sharded"
+    return "local"
+
+
 @dataclass
 class DeltaStats:
     """Repair counters, surfaced through ``QueryResult.stats``.

@@ -2,21 +2,40 @@
 
 ``QueryEngine`` coalesces concurrent queries over shared grammars into one
 masked-closure call each and caches both compiled executables (plan.py)
-and materialized closure rows (service.py).
+and materialized closure rows (service.py).  Construction takes a single
+typed :class:`EngineConfig` (``QueryEngine(graph, config=...)``); the
+default ``engine="auto"`` routes every closure call through the
+cost-based :class:`Planner` (planner.py), and per-request statistics are
+the typed :class:`QueryStats` (stats.py).
 """
 from repro.delta.repair import DeltaStats
 from repro.delta.txn import Snapshot, StaleSnapshotError
 
+from .config import ENGINE_CHOICES, EngineConfig
 from .plan import CompiledClosureCache, PlanKey, bucket_for, row_buckets
+from .planner import (
+    PlanDecision,
+    PlanFeatures,
+    Planner,
+    PlannerProfile,
+)
 from .service import Query, QueryEngine, QueryResult, grammar_key
+from .stats import QueryStats
 
 __all__ = [
     "CompiledClosureCache",
     "DeltaStats",
+    "ENGINE_CHOICES",
+    "EngineConfig",
+    "PlanDecision",
+    "PlanFeatures",
     "PlanKey",
+    "Planner",
+    "PlannerProfile",
     "Query",
     "QueryEngine",
     "QueryResult",
+    "QueryStats",
     "Snapshot",
     "StaleSnapshotError",
     "bucket_for",

@@ -1,0 +1,70 @@
+"""Engine construction knobs as one typed config (the public API).
+
+``QueryEngine(graph, config=EngineConfig(...))`` is the supported
+spelling; the legacy per-kwarg spelling (``QueryEngine(graph,
+engine="bitpacked", ...)``) still works but raises ``DeprecationWarning``.
+``engine="auto"`` — the default — routes every closure call through the
+cost-based planner (``repro.engine.planner``); naming a backend string
+pins it (the documented escape hatch: a pinned engine never falls back
+and always uses the legacy capacity ladder).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+from .plan import MASKED_ENGINES
+from .planner import PlannerProfile
+
+#: engine names accepted by :class:`EngineConfig` — the planner plus
+#: every pinnable backend.
+ENGINE_CHOICES = tuple(sorted(MASKED_ENGINES)) + ("auto",)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of one :class:`~repro.engine.QueryEngine`.
+
+    ``engine``
+        ``"auto"`` (default): the planner picks the cheapest executable
+        per closure call.  A backend name (``"dense"`` / ``"frontier"`` /
+        ``"bitpacked"`` / ``"opt"``) pins it explicitly.
+    ``mesh``
+        Device mesh for sharded execution.  Requires ``engine`` to be
+        ``"opt"`` (the only sharded backend) or ``"auto"`` (the planner
+        may choose the sharded executable when it is cheapest).
+    ``row_capacity``
+        Floor of the masked-closure capacity bucket ladder.
+    ``profile``
+        Planner cost profile: a :class:`PlannerProfile`, a path to a
+        calibrated JSON profile (``tools/calibrate_planner.py``), or
+        ``None`` for the defaults (the ``REPRO_PLANNER_PROFILE``
+        environment variable, if set, names the file to load).
+    """
+
+    engine: str = "auto"
+    mesh: Any = None
+    row_capacity: int = 128
+    profile: PlannerProfile | str | Path | None = None
+
+    def __post_init__(self) -> None:
+        if self.engine not in ENGINE_CHOICES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; pick one of "
+                f"{sorted(ENGINE_CHOICES)}"
+            )
+        if self.mesh is not None and self.engine not in ("opt", "auto"):
+            raise ValueError(
+                "mesh sharding is only supported by the 'opt' engine (or "
+                f"engine='auto'), not {self.engine!r}"
+            )
+        if self.row_capacity < 1:
+            raise ValueError("row_capacity must be >= 1")
+
+    def resolved_profile(self) -> PlannerProfile:
+        if isinstance(self.profile, PlannerProfile):
+            return self.profile
+        if self.profile is not None:
+            return PlannerProfile.load(self.profile)
+        return PlannerProfile.default()

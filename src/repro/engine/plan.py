@@ -156,8 +156,24 @@ class PlanKey:
 
 @dataclass
 class PlanStats:
+    """Compile-cache counters plus *provenance* tallies.
+
+    Provenance records **who asked** for each executable — ``"planned"``
+    (cost-based planner decision), ``"pinned"`` (caller named the
+    backend), or any caller-supplied tag — without touching PlanKey
+    identity: a planner-requested executable and a pinned one with the
+    same key share one compilation, and the tallies make that sharing
+    observable instead of folding routing into the cache key.
+    """
+
     compile_misses: int = 0
     compile_hits: int = 0
+    #: provenance tag -> requests (hits + misses) under that tag
+    provenance: dict = field(default_factory=dict)
+
+    def note_provenance(self, tag: str | None) -> None:
+        if tag:
+            self.provenance[tag] = self.provenance.get(tag, 0) + 1
 
     def as_dict(self) -> dict:
         return {
@@ -181,10 +197,14 @@ class CompiledClosureCache:
     def __len__(self) -> int:
         return len(self._exe)
 
-    def get(self, key: PlanKey, mesh=None):
+    def get(self, key: PlanKey, mesh=None, provenance: str | None = None):
         """Executable for ``key``.  Sharded keys (``key.mesh != ()``) need
         the concrete ``jax.sharding.Mesh`` on a cache miss — the mesh
-        carries the device assignment, the key only its shape identity."""
+        carries the device assignment, the key only its shape identity.
+        ``provenance`` tags the request origin (``"planned"`` /
+        ``"pinned"``) in :class:`PlanStats` — observability only, never
+        part of the key, so routing changes can't fragment the cache."""
+        self.stats.note_provenance(provenance)
         exe = self._exe.get(key)
         if exe is None:
             self.stats.compile_misses += 1

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -54,14 +55,15 @@ from repro.core.semantics import PathExtractor, base_lengths
 from repro.delta.repair import (
     DeltaStats,
     localize_state,
+    placement_of,
     plan_repair,
     repair_single_path_state,
     repair_state,
 )
 from repro.delta.txn import EpochClock, Snapshot
 
+from .config import EngineConfig
 from .plan import (
-    MASKED_ENGINES,
     CompiledClosureCache,
     PlanKey,
     bucket_for,
@@ -69,6 +71,8 @@ from .plan import (
     repair_engine_name,
     sp_engine_name,
 )
+from .planner import PlanDecision, PlanFeatures, Planner
+from .stats import QueryStats
 
 
 def grammar_key(g: CNFGrammar):
@@ -102,7 +106,7 @@ class QueryResult:
     query: Query
     pairs: set[tuple[int, int]]
     paths: dict[tuple[int, int], list[tuple[int, str, int]]] | None
-    stats: dict
+    stats: QueryStats
 
 
 @dataclass
@@ -123,6 +127,15 @@ class _GrammarState:
     # frozen annotations are — i.e. until the next ingested delta (warm
     # closure runs only add entries, they never rewrite frozen ones)
     sp_paths: dict = field(default_factory=dict)
+    # planner-visible state metadata: where each cached tensor lives
+    # ("local" | "sharded" | "none") — kept current across queries AND
+    # repairs (repair localizes sharded states; recording that here is
+    # what keeps the planner's cache-temperature feature from mis-costing
+    # a just-evicted sharded state) — and which backend last served it.
+    placement: str = "none"
+    sp_placement: str = "none"
+    served_by: str = ""
+    sp_served_by: str = ""
 
 
 class QueryEngine:
@@ -131,37 +144,76 @@ class QueryEngine:
     def __init__(
         self,
         graph: Graph,
-        engine: str = "dense",
+        engine: str | None = None,
         plans: CompiledClosureCache | None = None,
-        row_capacity: int = 128,
+        row_capacity: int | None = None,
         mesh=None,
+        *,
+        config: EngineConfig | None = None,
     ) -> None:
-        if engine not in MASKED_ENGINES:
-            raise ValueError(
-                f"unknown engine {engine!r}; pick one of "
-                f"{sorted(MASKED_ENGINES)}"
+        legacy = {
+            k: v
+            for k, v in (
+                ("engine", engine),
+                ("row_capacity", row_capacity),
+                ("mesh", mesh),
             )
-        if mesh is not None and engine != "opt":
+            if v is not None
+        }
+        if config is not None and legacy:
             raise ValueError(
-                f"mesh sharding is only supported by the 'opt' engine, "
-                f"not {engine!r}"
+                "pass engine/mesh/row_capacity through EngineConfig, not "
+                f"alongside config= (got both: {sorted(legacy)})"
             )
-        if mesh is not None and not {"data", "model"} <= set(mesh.axis_names):
+        if config is None:
+            if legacy:
+                # legacy kwarg spelling: honored (with the legacy default
+                # backend, dense — not the planner) but deprecated
+                warnings.warn(
+                    "QueryEngine(graph, engine=..., mesh=..., "
+                    "row_capacity=...) is deprecated; use "
+                    "QueryEngine(graph, config=EngineConfig(...)) — "
+                    "engine='auto' (the new default) routes through the "
+                    "cost-based planner, backend strings stay valid as "
+                    "explicit pins",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+                config = EngineConfig(
+                    engine=engine if engine is not None else "dense",
+                    mesh=mesh,
+                    row_capacity=(
+                        row_capacity if row_capacity is not None else 128
+                    ),
+                )
+            else:
+                config = EngineConfig()
+        if config.mesh is not None and not (
+            {"data", "model"} <= set(config.mesh.axis_names)
+        ):
             # fail fast with an actionable message — MeshPlan.from_mesh
             # would otherwise KeyError deep inside the first plan compile
             raise ValueError(
                 "opt mesh must name 'data' and 'model' axes "
-                f"(got {tuple(mesh.axis_names)})"
+                f"(got {tuple(config.mesh.axis_names)})"
             )
         self.graph = graph
-        self.engine = engine
-        # Device mesh for the distributed opt backend: masked closures
-        # shard the compacted row block over it (PlanKey carries its shape
-        # identity); None runs the same packed math on one device.
-        self.mesh = mesh
-        self._mesh_key = mesh_key_of(mesh)
+        self.config = config
+        #: configured engine name — ``"auto"`` means planner-routed; the
+        #: backend that actually served a request is in its stats
+        self.engine = config.engine
+        # Device mesh for sharded execution ("opt" pinned, or "auto" when
+        # the planner picks the sharded executable): masked closures shard
+        # the compacted row block over it (PlanKey carries its shape
+        # identity); None runs everything single-device.
+        self.mesh = config.mesh
+        self._mesh_key = mesh_key_of(config.mesh)
         self.plans = plans if plans is not None else CompiledClosureCache()
-        self.row_capacity = row_capacity
+        self.row_capacity = config.row_capacity
+        # the cost-based executable chooser; a pinned backend bypasses the
+        # cost model (planner.decide(pin=...)) but still records decisions
+        self.planner = Planner(config.resolved_profile())
+        self._pin = None if config.engine == "auto" else config.engine
         self.n = padded_size(graph.n_nodes)
         self._states: dict[tuple, _GrammarState] = {}
         self._edge_set = frozenset(graph.edges)  # content served last
@@ -274,8 +326,17 @@ class QueryEngine:
                         else np.asarray(state.T)
                     )
 
-                    def run(T_dev, seed, frozen, tables=state.tables):
-                        return self._run_fixpoint(tables, T_dev, seed, frozen)
+                    def run(T_dev, seed, frozen, tables=state.tables,
+                            st=state):
+                        seed_np = np.asarray(seed)
+                        d = self._decide(
+                            st, seed_np, seed_np, "relational", "warm",
+                            repair=True,
+                        )
+                        st.served_by = d.engine
+                        return self._run_fixpoint(
+                            tables, T_dev, seed, frozen, decision=d
+                        )[:3]  # repair never falls back; drop the event
 
                     T_host, T_dev, mask_new, st = repair_state(
                         T_np, state.T, np.asarray(state.mask), plan,
@@ -284,6 +345,12 @@ class QueryEngine:
                     state.T = T_dev
                     state.T_host = T_host
                     state.mask = mask_new
+                    # repair entrypoints localize sharded states (eviction
+                    # to one device) and run single-device executables —
+                    # record the post-repair placement so the planner's
+                    # cache-temperature/placement feature doesn't mis-cost
+                    # the just-evicted state on the next query
+                    state.placement = placement_of(T_dev)
                     stats.merge(st)
                 if state.sp_L is not None and state.sp_mask is not None:
                     # single-path states repair too: insertions warm-start
@@ -295,11 +362,18 @@ class QueryEngine:
                         else np.asarray(state.sp_L)
                     )
 
-                    def run_sp(L_dev, seed, frozen, tables=state.tables):
+                    def run_sp(L_dev, seed, frozen, tables=state.tables,
+                               st=state):
+                        seed_np = np.asarray(seed)
+                        d = self._decide(
+                            st, seed_np, seed_np, "single_path", "warm",
+                            repair=True,
+                        )
+                        st.sp_served_by = d.engine
                         return self._run_fixpoint(
                             tables, L_dev, seed, frozen,
-                            semantics="single_path",
-                        )
+                            semantics="single_path", decision=d,
+                        )[:3]
 
                     L_host, L_dev, sp_mask, st = repair_single_path_state(
                         L_np, state.sp_L, np.asarray(state.sp_mask), plan,
@@ -308,6 +382,7 @@ class QueryEngine:
                     state.sp_L = L_dev
                     state.sp_L_host = L_host
                     state.sp_mask = sp_mask
+                    state.sp_placement = placement_of(L_dev)
                     stats.merge(st)
         self._version = g.version
         self._edge_set = frozenset(g.edges)
@@ -401,6 +476,42 @@ class QueryEngine:
             return np.asarray(T)
         return T
 
+    def _decide(
+        self,
+        state: _GrammarState,
+        seed: np.ndarray,
+        new: np.ndarray,
+        semantics: str,
+        cache: str,
+        repair: bool = False,
+    ) -> PlanDecision:
+        """Build the planner features for one closure call and decide.
+
+        Every feature is something the engine already has on hand: the
+        seed mask (warm rows + requested rows), how many of those are new,
+        graph density, grammar size, the cached state's temperature and
+        placement, and whether a mesh is available.
+        """
+        single_path = semantics == "single_path"
+        f = PlanFeatures(
+            n=self.n,
+            seed_rows=int(seed.sum()),
+            new_rows=int(new.sum()),
+            density=len(self.graph.edges) / max(self.graph.n_nodes, 1),
+            n_prods=max(len(state.grammar.binary_prods), 1),
+            n_nonterms=len(state.grammar.nonterms),
+            semantics=semantics,
+            repair=repair,
+            cache=cache,
+            placement=state.sp_placement if single_path else state.placement,
+            mesh_devices=(
+                int(self.mesh.devices.size) if self.mesh is not None else 0
+            ),
+        )
+        return self.planner.decide(
+            f, pin=self._pin, min_capacity=self.row_capacity
+        )
+
     def _run_fixpoint(
         self,
         tables: ProductionTables,
@@ -408,6 +519,7 @@ class QueryEngine:
         seed: np.ndarray,
         frozen: np.ndarray | None = None,
         semantics: str = "relational",
+        decision: PlanDecision | None = None,
     ):
         """Run the masked closure to completion from ``seed`` rows, growing
         the capacity bucket on overflow (monotone warm restarts, so no work
@@ -419,16 +531,44 @@ class QueryEngine:
         With a mesh (opt backend) the non-repair executables are sharded —
         repair always runs the single-device path, so sharded states are
         localized first and re-shard on the next query.
-        Returns ``(T_device, M_host, n_calls)``."""
+
+        ``decision`` names the executable the planner picked; every
+        capacity overflow is a fallback observation point — when
+        :meth:`Planner.should_fallback` fires, the *remaining* closure is
+        re-dispatched onto the decision's fallback backend at full
+        capacity through the same monotone warm restart that grows
+        buckets (all masked engines share the ``(T, mask)`` signature, so
+        switching backends mid-closure is just a different executable on
+        the same state).  At most one fallback per run; pinned decisions
+        and repairs never fall back.
+
+        Returns ``(T_device, M_host, n_calls, fallback_event)``."""
         mask = np.asarray(seed)
         repair = frozen is not None
         single_path = semantics == "single_path"
+        if decision is None:  # direct callers (tests/tools) skip planning
+            decision = self.planner.decide(
+                PlanFeatures(
+                    n=self.n,
+                    seed_rows=int(mask.sum()),
+                    new_rows=int(mask.sum()),
+                    density=0.0,
+                    n_prods=max(tables.n_prods, 1),
+                    n_nonterms=tables.n_nonterms,
+                    semantics=semantics,
+                    repair=repair,
+                ),
+                pin=self._pin or "dense",
+                min_capacity=self.row_capacity,
+            )
+        # the decision names the backend; PlanKey aliasing still applies
+        # (bitpacked single-path keys dense, opt repair keys bitpacked)
         if single_path:
-            eng_name = sp_engine_name(self.engine, repair=repair)
+            eng_name = sp_engine_name(decision.engine, repair=repair)
         elif repair:
-            eng_name = repair_engine_name(self.engine)
+            eng_name = repair_engine_name(decision.engine)
         else:
-            eng_name = self.engine
+            eng_name = decision.engine
         # every repair executable is single-device; only the masked opt
         # query path carries the mesh identity
         mesh_k = self._mesh_key if (not repair and eng_name == "opt") else ()
@@ -438,7 +578,7 @@ class QueryEngine:
         if repair:
             frozen_dev = jnp.asarray(frozen)
             n_frozen = int(np.asarray(frozen).sum())
-        cap = bucket_for(max(self.row_capacity, int(mask.sum())), self.n)
+        cap = bucket_for(max(decision.row_capacity, int(mask.sum())), self.n)
         if repair and (single_path or eng_name != "bitpacked"):
             # dense/frontier (and every single-path) repair compacts the
             # contraction axis over active + frozen rows; the Boolean
@@ -446,6 +586,7 @@ class QueryEngine:
             # words instead
             cap_c = bucket_for(max(cap, int(mask.sum()) + n_frozen), self.n)
         calls = 0
+        fallback_event: dict | None = None
         while True:
             exe = self.plans.get(
                 PlanKey(
@@ -459,6 +600,7 @@ class QueryEngine:
                     mesh=mesh_k,
                 ),
                 mesh=self.mesh,
+                provenance="pinned" if decision.pinned else "planned",
             )
             if repair:
                 T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)
@@ -469,22 +611,49 @@ class QueryEngine:
                 break
             mask = np.asarray(M)  # monotone warm restart, larger capacity
             grown = int(mask.sum())
+            if fallback_event is None:
+                trigger = self.planner.should_fallback(
+                    decision, grown, self.n, calls
+                )
+                if trigger is not None:
+                    # the pick's assumptions were violated: re-dispatch the
+                    # remaining closure onto the fallback executable at
+                    # full capacity (no work lost — same warm restart)
+                    fb = decision.fallback_engine
+                    fallback_event = {
+                        "from": eng_name,
+                        "to": fb,
+                        "trigger": trigger,
+                        "at_call": calls,
+                        "active_rows": grown,
+                    }
+                    eng_name = (
+                        sp_engine_name(fb, repair=False) if single_path else fb
+                    )
+                    mesh_k = (
+                        self._mesh_key if eng_name == "opt" else ()
+                    )
+                    T = self._place_state(T, sharded=bool(mesh_k))
+                    cap = self.n
+                    self.planner.note_fallback()
+                    continue
             # overflow implies the active set outgrew cap or (repair) the
             # context outgrew cap_c, so at least one bucket grows strictly
             cap = bucket_for(max(cap, grown), self.n)
             if cap_c:
                 cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
-        return T, np.asarray(M), calls
+        return T, np.asarray(M), calls, fallback_event
 
     def _ensure_rows(
         self,
         state: _GrammarState,
         batch: list[Query],
         semantics: str = "relational",
-    ) -> str:
+    ) -> tuple[str, PlanDecision | None, dict | None]:
         """Materialize closure rows covering the batch (the Boolean state,
         or the f32 length state for ``semantics="single_path"``); returns
-        the cache status."""
+        ``(cache_status, decision, fallback_event)`` — the latter two are
+        None on a pure cache hit (no closure ran, nothing was planned)."""
         single_path = semantics == "single_path"
         need = self._need_mask(batch)
         if need is None:
@@ -493,41 +662,55 @@ class QueryEngine:
         mask = state.sp_mask if single_path else state.mask
         cur = state.sp_L if single_path else state.T
         if mask is not None and (need <= mask).all():
-            return "hit"
+            return "hit", None, None
         status = "miss" if cur is None else "warm"
         if cur is None:
             cur = init_matrix(self.graph, state.grammar, pad_to=self.n)
             if single_path:
                 cur = base_lengths(cur)
             mask = np.zeros(self.n, dtype=bool)
-        out, M, _ = self._run_fixpoint(
-            state.tables, cur, np.asarray(mask) | need, semantics=semantics
+        mask = np.asarray(mask)
+        decision = self._decide(
+            state, mask | need, need & ~mask, semantics, status
         )
+        out, M, _, fb = self._run_fixpoint(
+            state.tables, cur, mask | need, semantics=semantics,
+            decision=decision,
+        )
+        served = fb["to"] if fb else decision.engine
         if single_path:
             state.sp_L, state.sp_L_host, state.sp_mask = out, np.asarray(out), M
+            state.sp_placement = placement_of(out)
+            state.sp_served_by = served
         else:
             state.T, state.T_host, state.mask = out, np.asarray(out), M
-        return status
+            state.placement = placement_of(out)
+            state.served_by = served
+        return status, decision, fb
 
     def _serve_relational(
         self, state: _GrammarState, batch: list[Query]
     ) -> list[QueryResult]:
         t0 = time.perf_counter()
-        status = self._ensure_rows(state, batch)
+        status, decision, fb = self._ensure_rows(state, batch)
         latency = time.perf_counter() - t0
         nn = self.graph.n_nodes
         T = state.T_host
-        stats = {
-            "latency_s": latency,
-            "cache": status,
-            "engine": self.engine,
-            "semantics": "relational",
-            "batched_with": len(batch),
-            "active_rows": int(state.mask.sum()),
-            "epoch": self.clock.epoch,
-            **self.delta_stats.as_dict(),
-            **self.plans.stats.as_dict(),
-        }
+        stats = QueryStats(
+            latency_s=latency,
+            cache=status,
+            # the backend that materialized the served rows — on a cache
+            # hit that is whoever ran last, not whoever would run next
+            engine=state.served_by or self.engine,
+            semantics="relational",
+            batched_with=len(batch),
+            active_rows=int(state.mask.sum()),
+            epoch=self.clock.epoch,
+            planner=decision.to_dict() if decision is not None else None,
+            fallback=fb,
+        )
+        stats.update(self.delta_stats.as_dict())
+        stats.update(self.plans.stats.as_dict())
         outs = []
         for q in batch:
             a0 = state.grammar.index_of(q.start)
@@ -537,14 +720,16 @@ class QueryEngine:
                 pairs.update((i, int(j)) for j in np.nonzero(T[a0, i, :nn])[0])
             if q.start in state.grammar.nullable:
                 pairs |= {(m, m) for m in rows}  # empty path m pi m
-            outs.append(QueryResult(q, pairs, None, dict(stats)))
+            outs.append(QueryResult(q, pairs, None, stats.copy()))
         return outs
 
     def _serve_single_path(
         self, state: _GrammarState, batch: list[Query]
     ) -> list[QueryResult]:
         t0 = time.perf_counter()
-        status = self._ensure_rows(state, batch, semantics="single_path")
+        status, decision, fb = self._ensure_rows(
+            state, batch, semantics="single_path"
+        )
         L = state.sp_L_host
         if state.extractor is None:  # invalidated on every ingested delta
             state.extractor = PathExtractor(self.graph, state.grammar)
@@ -579,18 +764,20 @@ class QueryEngine:
         # latency includes witness extraction — the dominant per-request
         # host cost on hot serves — not just the closure work
         latency = time.perf_counter() - t0
-        stats = {
-            "latency_s": latency,
-            "cache": status,
-            "engine": self.engine,
-            "semantics": "single_path",
-            "batched_with": len(batch),
-            "active_rows": int(state.sp_mask.sum()),
-            "epoch": self.clock.epoch,
-            **self.delta_stats.as_dict(),
-            **self.plans.stats.as_dict(),
-        }
+        stats = QueryStats(
+            latency_s=latency,
+            cache=status,
+            engine=state.sp_served_by or self.engine,
+            semantics="single_path",
+            batched_with=len(batch),
+            active_rows=int(state.sp_mask.sum()),
+            epoch=self.clock.epoch,
+            planner=decision.to_dict() if decision is not None else None,
+            fallback=fb,
+        )
+        stats.update(self.delta_stats.as_dict())
+        stats.update(self.plans.stats.as_dict())
         return [
-            QueryResult(q, pairs, paths, dict(stats))
+            QueryResult(q, pairs, paths, stats.copy())
             for q, pairs, paths in sliced
         ]

@@ -13,6 +13,12 @@ Invariant: an item added to a window is removed by exactly one ``take()``
 — ``take`` atomically empties the buffer and disarms the deadline, so a
 size flush racing a deadline timer can never hand the same query to two
 batches (the late flusher sees an empty window and no-ops).
+
+Every flushed window becomes ONE ``QueryEngine.query_batch`` call and
+therefore ONE planner decision (``repro.engine.planner``): the engine
+plans per closure-call group, and a route key fixes (grammar, semantics),
+so coalescing is also what amortizes planning — the batch's union source
+mask is the seed-row feature the cost model prices.
 """
 from __future__ import annotations
 

@@ -76,6 +76,13 @@ class ServeStats:
     test asserts.  ``coalesced`` sums batch sizes, so
     ``coalesced / max(batches, 1)`` is the mean batch size actually
     achieved at the offered load.
+
+    ``planner_routes`` tallies the planner decisions behind served
+    batches (decision label → count, one per closure-call group that
+    actually ran — cache-hit groups planned nothing); ``fallbacks``
+    counts mid-closure re-dispatches.  Together they make the engine's
+    routing visible at the serving layer without digging through
+    per-result stats.
     """
 
     admitted: int = 0
@@ -89,11 +96,21 @@ class ServeStats:
     flushes: dict[str, int] = field(
         default_factory=lambda: {r: 0 for r in FlushReason.ALL}
     )
+    planner_routes: dict[str, int] = field(default_factory=dict)
+    fallbacks: int = 0
 
     def note_flush(self, reason: str, size: int) -> None:
         self.batches += 1
         self.coalesced += size
         self.flushes[reason] = self.flushes.get(reason, 0) + 1
+
+    def note_decision(self, planner: dict | None, fallback: dict | None) -> None:
+        """Tally one closure-call group's routing (from its result stats)."""
+        if planner is not None:
+            label = planner.get("label", "?")
+            self.planner_routes[label] = self.planner_routes.get(label, 0) + 1
+        if fallback is not None:
+            self.fallbacks += 1
 
     @property
     def mean_batch(self) -> float:
@@ -111,4 +128,6 @@ class ServeStats:
             "coalesced": self.coalesced,
             "mean_batch": self.mean_batch,
             "flushes": dict(self.flushes),
+            "planner_routes": dict(self.planner_routes),
+            "fallbacks": self.fallbacks,
         }

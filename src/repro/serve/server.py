@@ -312,6 +312,13 @@ class CFPQServer:
                 return
             t1 = self._clock()
         self.stats.served += len(items)
+        if results:
+            # one window == one (grammar, semantics) route == one closure
+            # group, so the whole batch shares one planner decision; tally
+            # it once (None on a pure cache hit — nothing was planned)
+            self.stats.note_decision(
+                results[0].stats.planner, results[0].stats.fallback
+            )
         for it, r in zip(items, results):
             r.stats["queue_delay_s"] = t0 - it.t_admit
             r.stats["batch_exec_s"] = t1 - t0

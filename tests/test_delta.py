@@ -22,7 +22,12 @@ from repro.core.matrices import (
 from repro.core.semantics import evaluate_relational
 from repro.delta.repair import reverse_reach_rows
 from repro.delta.txn import EpochClock, Snapshot, StaleSnapshotError
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.engine.plan import MASKED_ENGINES
 from helpers import assert_path_witness
 
@@ -131,7 +136,7 @@ def _pairs_for(graph, g, sources):
 def test_insert_repair_matches_scratch(engine):
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=1)
-    eng = QueryEngine(graph, engine=engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=engine))
     src = (0, 3, 7)
     eng.query(Query(g, "S", sources=src))
     st = eng.apply_delta(
@@ -147,7 +152,7 @@ def test_insert_repair_matches_scratch(engine):
 def test_delete_evicts_and_recomputes(engine):
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=1)
-    eng = QueryEngine(graph, engine=engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=engine))
     src = (0, 3, 7)
     eng.query(Query(g, "S", sources=src))
     victim = graph.edges[0]
@@ -164,7 +169,7 @@ def test_repair_contract_rows_bit_identical_to_scratch():
     correctness contract, checked on the raw state."""
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=2)
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     eng.query(Query(g, "S", sources=(0, 5)))
     eng.apply_delta(
         insert=[(1, "subClassOf", 4), (8, "type", 3)],
@@ -190,7 +195,7 @@ def test_differential_random_interleaving(engine):
     n = 24
     graph = random_labeled_graph(n, 50, ["a", "b"], seed=7)
     graph.edges[:] = sorted(set(graph.edges))  # dedup for clean deletes
-    eng = QueryEngine(graph, engine=engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=engine))
     plans = CompiledClosureCache()  # shared by the scratch references
 
     def random_edge():
@@ -212,7 +217,8 @@ def test_differential_random_interleaving(engine):
         )
         got = eng.query(Query(g, "S", sources=sources))
         scratch = QueryEngine(
-            Graph(n, list(graph.edges)), engine=engine, plans=plans
+            Graph(n, list(graph.edges)), plans=plans,
+            config=EngineConfig(engine=engine),
         )
         want = scratch.query(Query(g, "S", sources=sources))
         assert got.pairs == want.pairs, (engine, step, sources)
@@ -230,7 +236,7 @@ def test_single_path_insert_repair_not_dropped(engine):
     yields oracle-valid witnesses for the mutated graph."""
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=1)
-    eng = QueryEngine(graph, engine=engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=engine))
     src = (0, 3, 7)
     eng.query(Query(g, "S", sources=src, semantics="single_path"))
     st = eng.apply_delta(
@@ -252,7 +258,7 @@ def test_single_path_repair_freezes_unaffected_rows_bit_identical():
     g = query1_grammar().to_cnf()
     graph = ontology_graph(15, 25, seed=2).repeat(2)
     half = graph.n_nodes // 2
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     eng.query(Query(g, "S", semantics="single_path"))
     (state,) = eng._states.values()
     L_before = np.array(state.sp_L_host, copy=True)
@@ -284,7 +290,7 @@ def test_differential_single_path_interleaving(engine):
     n = 24
     graph = random_labeled_graph(n, 50, ["a", "b"], seed=8)
     graph.edges[:] = sorted(set(graph.edges))
-    eng = QueryEngine(graph, engine=engine)
+    eng = QueryEngine(graph, config=EngineConfig(engine=engine))
     plans = CompiledClosureCache()
 
     def random_edge():
@@ -309,7 +315,8 @@ def test_differential_single_path_interleaving(engine):
             Query(g, "S", sources=sources, semantics="single_path")
         )
         scratch = QueryEngine(
-            Graph(n, list(graph.edges)), engine=engine, plans=plans
+            Graph(n, list(graph.edges)), plans=plans,
+            config=EngineConfig(engine=engine),
         )
         want = scratch.query(Query(g, "S", sources=sources))
         assert got.pairs == want.pairs, (engine, step, sources)
@@ -335,7 +342,7 @@ def test_sharded_state_repair_evict_mechanics():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=1)
-    eng = QueryEngine(graph, engine="opt", mesh=mesh)
+    eng = QueryEngine(graph, config=EngineConfig(engine="opt", mesh=mesh))
     src = (0, 3, 7)
     eng.query(Query(g, "S", sources=src))
     eng.query(Query(g, "S", sources=src, semantics="single_path"))
@@ -447,7 +454,7 @@ def test_apply_delta_never_serves_stale_rows_under_snapshot():
     mutated graph at the advanced epoch."""
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=4)
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     src = (0, 2)
     r0 = eng.query(Query(g, "S", sources=src))
     assert r0.stats["epoch"] == 0
@@ -501,7 +508,7 @@ def test_out_of_band_edit_concurrent_with_logged_edit_not_masked():
 def test_delta_stats_surfaced_in_query_results():
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=5)
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     eng.query(Query(g, "S", sources=(0,)))
     eng.apply_delta(insert=[(0, "type", 3)])
     eng.apply_delta(delete=[graph.edges[0]])
@@ -515,7 +522,7 @@ def test_delta_stats_surfaced_in_query_results():
 def test_noop_delta_does_not_advance_epoch_or_drop_cache():
     g = query1_grammar().to_cnf()
     graph = ontology_graph(30, 60, seed=6)
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     eng.query(Query(g, "S", sources=(0,)))
     st = eng.apply_delta(insert=[graph.edges[0]])  # already present
     assert st.rows_repaired == 0 and eng.clock.epoch == 0

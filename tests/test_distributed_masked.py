@@ -30,7 +30,12 @@ from repro.core.grammar import Grammar, query1_grammar
 from repro.core.graph import Graph, ontology_graph, random_labeled_graph
 from repro.core.matrices import LANE, ProductionTables, init_matrix
 from repro.core.semantics import PathExtractor, base_lengths
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from helpers import (
     assert_path_witness,
     masked_oracle_run,
@@ -260,7 +265,10 @@ def test_sharded_engine_delta_interleaving(mesh_shape):
     n = 24
     graph = random_labeled_graph(n, 50, ["a", "b"], seed=11)
     graph.edges[:] = sorted(set(graph.edges))
-    eng = QueryEngine(graph, engine="opt", mesh=_mesh(mesh_shape), plans=PLANS)
+    eng = QueryEngine(
+        graph, plans=PLANS,
+        config=EngineConfig(engine="opt", mesh=_mesh(mesh_shape)),
+    )
     scratch_plans = CompiledClosureCache()
 
     def random_edge():
@@ -281,7 +289,8 @@ def test_sharded_engine_delta_interleaving(mesh_shape):
             sorted(set(int(s) for s in rng.integers(0, n, size=3)))
         )
         scratch = QueryEngine(
-            Graph(n, list(graph.edges)), engine="dense", plans=scratch_plans
+            Graph(n, list(graph.edges)), plans=scratch_plans,
+            config=EngineConfig(engine="dense"),
         )
         want = scratch.query(Query(g, "S", sources=sources))
         got = eng.query(Query(g, "S", sources=sources))
@@ -302,7 +311,10 @@ def test_sharded_repair_freezes_unaffected_rows_bit_identical(mesh_shape):
     g = query1_grammar().to_cnf()
     graph = ontology_graph(15, 25, seed=2).repeat(2)
     half = graph.n_nodes // 2
-    eng = QueryEngine(graph, engine="opt", mesh=_mesh(mesh_shape), plans=PLANS)
+    eng = QueryEngine(
+        graph, plans=PLANS,
+        config=EngineConfig(engine="opt", mesh=_mesh(mesh_shape)),
+    )
     eng.query(Query(g, "S"))
     eng.query(Query(g, "S", semantics="single_path"))
     (state,) = eng._states.values()

@@ -9,7 +9,13 @@ from repro.core.grammar import Grammar, PAPER_EXAMPLE_CNF, query1_grammar
 from repro.core.graph import Graph, ontology_graph, paper_example_graph
 from repro.core.matrices import ProductionTables, init_matrix
 from repro.core.semantics import evaluate_relational, evaluate_single_path
-from repro.engine import Query, QueryEngine, bucket_for, row_buckets
+from repro.engine import (
+    EngineConfig,
+    Query,
+    QueryEngine,
+    bucket_for,
+    row_buckets,
+)
 from repro.engine.plan import MASKED_ENGINES
 
 ENGINES = sorted(MASKED_ENGINES)
@@ -44,7 +50,7 @@ def test_single_source_query_matches_allpairs(engine):
         (ontology_graph(40, 99, seed=2), query1_grammar().to_cnf()),
     ):
         full = evaluate_relational(graph, g, "S")
-        eng = QueryEngine(graph, engine=engine)
+        eng = QueryEngine(graph, config=EngineConfig(engine=engine))
         for sources in [(0,), (1, 2), tuple(range(min(8, graph.n_nodes)))]:
             r = eng.query(Query(g, "S", sources=sources))
             assert r.pairs == {(i, j) for (i, j) in full if i in sources}
@@ -61,7 +67,7 @@ def test_allpairs_query_through_service():
 def test_repeated_query_hits_materialized_cache_without_retrace():
     graph = ontology_graph(40, 99, seed=2)
     g = query1_grammar().to_cnf()
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     r1 = eng.query(Query(g, "S", sources=(0, 5)))
     assert r1.stats["cache"] == "miss"
     compiles = eng.plans.stats.compile_misses
@@ -82,7 +88,7 @@ def test_new_sources_warm_start_reuses_compiled_plan():
     graph = ontology_graph(40, 99, seed=2)
     g = query1_grammar().to_cnf()
     full = evaluate_relational(graph, g, "S")
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     eng.query(Query(g, "S", sources=(0,)))
     compiles = eng.plans.stats.compile_misses
     r = eng.query(Query(g, "S", sources=(1,)))
@@ -96,7 +102,7 @@ def test_batch_coalesces_one_closure_per_grammar():
     graph = ontology_graph(40, 99, seed=2)
     g = query1_grammar().to_cnf()
     full = evaluate_relational(graph, g, "S")
-    eng = QueryEngine(graph, engine="bitpacked")
+    eng = QueryEngine(graph, config=EngineConfig(engine="bitpacked"))
     rs = eng.query_batch(
         [
             Query(g, "S", sources=(2,)),
@@ -148,7 +154,7 @@ def test_overflow_grows_capacity_and_stays_correct():
     graph = ontology_graph(40, 99, seed=2)
     g = query1_grammar().to_cnf()
     full = evaluate_relational(graph, g, "S")
-    eng = QueryEngine(graph, engine="dense", row_capacity=128)
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense", row_capacity=128))
     # the reachable set (139 rows) overflows the first bucket; the service
     # must bucket up and still return exact rows
     r = eng.query(Query(g, "S", sources=(0, 5, 17)))

@@ -17,7 +17,7 @@ import pytest
 from repro.core.graph import Graph, ontology_graph
 from repro.core.grammar import query1_grammar
 from repro.core.semantics import evaluate_relational
-from repro.engine import Query, QueryEngine
+from repro.engine import EngineConfig, Query, QueryEngine
 from repro.serve import (
     BatchWindow,
     CFPQServer,
@@ -159,7 +159,7 @@ def test_opt_backend_serving_smoke():
     async def main():
         graph = ontology_graph(20, 40, seed=0)
         g = query1_grammar().to_cnf()
-        eng = QueryEngine(graph, engine="opt")
+        eng = QueryEngine(graph, config=EngineConfig(engine="opt"))
         ref = evaluate_relational(graph, g, "S")
         cfg = ServeConfig(max_batch=4, batch_window_s=0.005)
         async with CFPQServer(eng, cfg) as srv:

@@ -23,7 +23,12 @@ from repro.core.semantics import (
     masked_frontier_single_path_closure,
     masked_single_path_closure,
 )
-from repro.engine import CompiledClosureCache, Query, QueryEngine
+from repro.engine import (
+    CompiledClosureCache,
+    EngineConfig,
+    Query,
+    QueryEngine,
+)
 from repro.engine.plan import MASKED_ENGINES
 from helpers import assert_path_witness, random_cnf, random_graph
 
@@ -101,7 +106,7 @@ def test_single_path_property_random(engine, seed):
     graph = random_graph(rng, n_nodes=6, n_edges=12)
     start = g.nonterms[0]
     rel = evaluate_relational(graph, g, start)
-    eng = QueryEngine(graph, engine=engine, plans=PLANS)
+    eng = QueryEngine(graph, plans=PLANS, config=EngineConfig(engine=engine))
     sources = (0, 2, 4)
     r = eng.query(Query(g, start, sources=sources, semantics="single_path"))
     # (a) isfinite(L) == relational closure, per requested source rows
@@ -120,7 +125,7 @@ def test_single_path_through_service_matches_library(engine):
     graph = paper_example_graph()
     g = query1_grammar().to_cnf()
     sp_full = evaluate_single_path(graph, g, "S")
-    eng = QueryEngine(graph, engine=engine, plans=PLANS)
+    eng = QueryEngine(graph, plans=PLANS, config=EngineConfig(engine=engine))
     r = eng.query(Query(g, "S", sources=(0,), semantics="single_path"))
     assert set(r.paths) == {p for p in sp_full if p[0] == 0}
     r2 = eng.query(Query(g, "S", semantics="single_path"))
@@ -139,7 +144,7 @@ def test_single_path_caches_next_to_relational_state():
     once materialized, and the plan cache keys them apart."""
     graph = ontology_graph(30, 60, seed=2)
     g = query1_grammar().to_cnf()
-    eng = QueryEngine(graph, engine="dense")
+    eng = QueryEngine(graph, config=EngineConfig(engine="dense"))
     r = eng.query(Query(g, "S", sources=(0,), semantics="single_path"))
     assert r.stats["cache"] == "miss" and r.stats["semantics"] == "single_path"
     rr = eng.query(Query(g, "S", sources=(0,)))
@@ -158,7 +163,7 @@ def test_single_path_batch_coalesces_and_overflow_buckets_up():
     graph = ontology_graph(40, 99, seed=2)
     g = query1_grammar().to_cnf()
     full = evaluate_relational(graph, g, "S")
-    eng = QueryEngine(graph, engine="frontier", row_capacity=128)
+    eng = QueryEngine(graph, config=EngineConfig(engine="frontier", row_capacity=128))
     rs = eng.query_batch(
         [
             Query(g, "S", sources=(0,), semantics="single_path"),

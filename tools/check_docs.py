@@ -8,7 +8,11 @@ Two checks over the subsystem docs (ARCHITECTURE/ENGINE/DELTA/SERVING.md):
    an existing file, and every ``#anchor`` (own-file or cross-file) must
    match a real heading's GitHub-style slug.  Renaming a heading that
    another doc links to fails CI instead of silently 404ing.
-2. **Quickstart execution** — the ``python`` code blocks of
+2. **Required anchors** — headings that code comments, CI configs, or
+   external references point at by slug must keep existing
+   (``REQUIRED_ANCHORS``); renaming one fails CI even if no *doc*
+   currently links to it.
+3. **Quickstart execution** — the ``python`` code blocks of
    ARCHITECTURE.md are extracted in order and executed in one shared
    namespace (doctest-style: later blocks may use earlier blocks' names),
    so the README-style quickstart can never drift from the actual API.
@@ -27,6 +31,19 @@ DOCS = ["ARCHITECTURE.md", "ENGINE.md", "DELTA.md", "SERVING.md"]
 #: docs whose ``python`` blocks must be runnable as-is (others may hold
 #: illustrative fragments)
 EXEC_DOCS = ["ARCHITECTURE.md"]
+#: heading slugs that must exist — referenced from code/CI, not just docs
+REQUIRED_ANCHORS: dict[str, list[str]] = {
+    "ENGINE.md": [
+        "backends",
+        "choosing-a-backend",
+        "decision-features",
+        "profile-file-format",
+        "pinning",
+        "cache-semantics",
+        "semantics",
+    ],
+    "ARCHITECTURE.md": ["quickstart", "the-stack"],
+}
 
 _HEADING = re.compile(r"^(#{1,6})\s+(.*)$", re.M)
 #: inline links, excluding images; bare-url and reference links are not used
@@ -113,8 +130,22 @@ def run_quickstarts(docs: list[str]) -> list[str]:
     return problems
 
 
+def check_required_anchors() -> list[str]:
+    problems: list[str] = []
+    for doc, slugs in REQUIRED_ANCHORS.items():
+        have = anchors_of(REPO / doc)
+        for slug in slugs:
+            if slug not in have:
+                problems.append(
+                    f"{doc}: required anchor #{slug} missing "
+                    f"(a heading was renamed or removed)"
+                )
+    return problems
+
+
 def main() -> int:
     problems = check_links(DOCS)
+    problems += check_required_anchors()
     problems += run_quickstarts(EXEC_DOCS)
     n_blocks = sum(len(python_blocks(REPO / d)) for d in EXEC_DOCS)
     if problems:
