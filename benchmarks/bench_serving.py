@@ -168,6 +168,71 @@ def bench_window_sweep(
     return out
 
 
+def bench_observed(
+    n: int,
+    n_requests: int,
+    qps: float,
+    max_batch: int,
+    trace_out: str | None,
+    metrics_out: str | None,
+) -> dict:
+    """One fully observed open-loop run (repro.obs; OBSERVABILITY.md):
+    a live tracer captures the span tree admission → window → planner →
+    closure (with per-iteration events from instrumented executables) and
+    a private registry collects the serving/engine metric families.  Runs
+    on its own engine and plan cache — instrumented executables are
+    distinct PlanKeys, so the gated trials above stay untraced — and
+    writes the Chrome trace / metrics snapshot to the requested paths."""
+    from repro.obs.chrome import write_chrome_trace
+    from repro.obs.export import write_metrics_json
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
+
+    g = Grammar.from_text(GRAMMAR).to_cnf()
+    graph = chain_communities(n)
+    workload = [
+        Query(g, "S", sources=(k * COMMUNITY + COMMUNITY - 1,))
+        for k in range(n_requests)
+    ]
+    arrivals = poisson_arrivals(n_requests, qps, np.random.default_rng(2))
+
+    tracer = Tracer()
+    registry = MetricsRegistry()
+    eng = QueryEngine(graph, config=_ENGINE)
+    cfg = ServeConfig(
+        max_batch=max_batch, batch_window_s=0.005, max_queue_depth=4096
+    )
+    run = asyncio.run(
+        drive_open_loop(
+            eng, workload, arrivals, cfg, tracer=tracer, metrics=registry
+        )
+    )
+    iteration_events = sum(
+        1
+        for sp in tracer.spans
+        for ev in sp.events
+        if ev["name"] == "iteration"
+    )
+    summary = {
+        "served": len(run.results),
+        "spans": len(tracer.spans),
+        "iteration_events": iteration_events,
+        "dropped_spans": tracer.dropped,
+        "trace_out": trace_out,
+        "metrics_out": metrics_out,
+    }
+    if trace_out:
+        write_chrome_trace(trace_out, tracer)
+    if metrics_out:
+        write_metrics_json(
+            metrics_out,
+            registry=registry,
+            serve_stats=run.stats,
+            extra={"bench": "bench_serving.observed", "n_requests": n_requests},
+        )
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=512)
@@ -178,6 +243,16 @@ def main() -> None:
         "--windows-ms", type=float, nargs="+", default=[0.0, 2.0, 10.0, 25.0]
     )
     ap.add_argument("--smoke", action="store_true", help="tiny CI config")
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="also run one traced pass; write Chrome trace JSON here",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        help="write the traced pass's metrics snapshot JSON here",
+    )
     args = ap.parse_args()
     if args.smoke:
         args.requests = 48
@@ -195,6 +270,15 @@ def main() -> None:
         ),
         "plans_compiled": plans.stats.compile_misses,
     }
+    if args.trace_out or args.metrics_out:
+        out["observed"] = bench_observed(
+            args.n,
+            args.requests,
+            args.qps,
+            args.max_batch,
+            args.trace_out,
+            args.metrics_out,
+        )
     print(json.dumps(out, indent=2))
     if out["coalescing"]["throughput_speedup"] < 3.0:
         raise SystemExit(

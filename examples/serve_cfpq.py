@@ -46,7 +46,33 @@ async def run_async(args, graph, workload) -> None:
     arrivals = poisson_arrivals(
         len(workload), args.qps, np.random.default_rng(args.seed + 1)
     )
-    run = await drive_open_loop(eng, workload, arrivals, cfg)
+    # observability (repro.obs; OBSERVABILITY.md): --trace-out records the
+    # span tree for Perfetto, --metrics-out dumps the metric families
+    tracer = registry = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
+        registry = MetricsRegistry()
+    run = await drive_open_loop(
+        eng, workload, arrivals, cfg, tracer=tracer, metrics=registry
+    )
+    if args.trace_out:
+        from repro.obs.chrome import write_chrome_trace
+
+        write_chrome_trace(args.trace_out, tracer)
+        print(
+            f"[serve-cfpq] wrote {len(tracer.spans)} spans to "
+            f"{args.trace_out} (open in Perfetto)"
+        )
+    if args.metrics_out:
+        from repro.obs.export import write_metrics_json
+
+        write_metrics_json(
+            args.metrics_out, registry=registry, serve_stats=run.stats
+        )
+        print(f"[serve-cfpq] wrote metrics snapshot to {args.metrics_out}")
 
     print(
         f"[serve-cfpq] async: offered {args.qps:.0f} qps, window "
@@ -92,6 +118,11 @@ def main() -> None:
                     help="--async batch-window deadline (seconds)")
     ap.add_argument("--queue-depth", type=int, default=256,
                     help="--async admission bound (queries in flight)")
+    ap.add_argument("--trace-out", default=None,
+                    help="--async only: write a Chrome trace JSON of the "
+                         "run (load in Perfetto; see OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="--async only: write a metrics snapshot JSON")
     args = ap.parse_args()
 
     graph = ontology_graph(args.classes, args.instances, seed=args.seed)

@@ -315,18 +315,47 @@ def _active_rows(M: jnp.ndarray, R: int):
     return idx, valid
 
 
+def _iter_event(hook, it, M_next, changed, overflow) -> None:
+    """Iteration-boundary observability hook (repro.obs).
+
+    ``hook`` is a *static* argument of the masked closures: ``None``
+    (the default, and every uninstrumented plan) compiles to nothing at
+    all — same HLO as before the hook existed.  When set, a host
+    callback fires once per fixpoint iteration with
+    ``(iteration, active_rows, changed_units, overflow)``; ``changed``
+    is whatever per-engine array records this iteration's growth (bool
+    entries on dense paths, changed words on packed paths), reduced here
+    so the transfer is four scalars.  Callback ordering follows program
+    order within the loop; callers flush with ``jax.effects_barrier()``
+    (see repro.obs.trace.iteration_scope).
+    """
+    if hook is None:
+        return
+    jax.debug.callback(
+        hook,
+        it + 1,
+        jnp.sum(M_next, dtype=jnp.int32),
+        jnp.sum(changed, dtype=jnp.int32),
+        overflow,
+    )
+
+
 def _masked_limit(T: jnp.ndarray, max_iters: int | None) -> int:
     # the mask can grow for at most n extra iterations beyond the T bound
     return _iter_limit(T, max_iters) + T.shape[-1]
 
 
-@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
 def masked_closure(
     T: jnp.ndarray,
     tables: ProductionTables,
     src_mask: jnp.ndarray,
     row_capacity: int = 128,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Source-restricted closure on the dense MXU path.
 
@@ -360,7 +389,9 @@ def masked_closure(
         new = jnp.zeros_like(T).at[:, idx, :].max(new_r)
         M_next = M | jnp.any(rows, axis=(0, 1))  # columns reached -> new rows
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
-        grew = jnp.any(new & ~T) | jnp.any(M_next & ~M)
+        changed = new & ~T
+        grew = jnp.any(changed) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed, overflow)
         return T | new, M_next, grew, overflow, it + 1
 
     state = (T, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
@@ -368,13 +399,17 @@ def masked_closure(
     return T, M, overflow
 
 
-@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
 def masked_frontier_closure(
     T: jnp.ndarray,
     tables: ProductionTables,
     src_mask: jnp.ndarray,
     row_capacity: int = 128,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Masked closure with the frontier (delta) trick: only products through
     entries discovered in the previous iteration are formed, and rows newly
@@ -407,6 +442,7 @@ def masked_frontier_closure(
         newly = M_next & ~M  # rows activated now: their base edges are fresh
         D_next = (new & ~T) | (T & newly[None, :, None])
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        _iter_event(iter_hook, it, M_next, new & ~T, overflow)
         return T | new, D_next, M_next, overflow, it + 1
 
     D0 = T & src_mask[None, :, None]
@@ -417,7 +453,9 @@ def masked_frontier_closure(
 
 @partial(
     jax.jit,
-    static_argnames=("tables", "row_capacity", "max_iters", "use_kernel"),
+    static_argnames=(
+        "tables", "row_capacity", "max_iters", "use_kernel", "iter_hook"
+    ),
 )
 def masked_bitpacked_closure(
     T: jnp.ndarray,
@@ -426,6 +464,7 @@ def masked_bitpacked_closure(
     row_capacity: int = 128,
     max_iters: int | None = None,
     use_kernel: bool = True,
+    iter_hook=None,
 ):
     """Source-restricted closure on packed words via the rectangular bitmm
     path: lhs is the (P, R, w) gather of active rows, rhs the full (P, n, w)
@@ -463,7 +502,9 @@ def masked_bitpacked_closure(
         M_next = M | unpack_bits(reach_w, n)
         Tp_next = Tp | new
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
-        grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
+        changed_w = Tp_next != Tp  # changed words (packed growth unit)
+        grew = jnp.any(changed_w) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed_w, overflow)
         return Tp_next, M_next, grew, overflow, it + 1
 
     state = (Tp0, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
@@ -499,6 +540,11 @@ def masked_opt_closure(
     ``(T, M, overflowed)``; bucket-growth warm restarts are monotone and
     rows already at their fixpoint come back bit-identical regardless of
     the mesh shape (tested in tests/test_distributed_masked.py).
+
+    No ``iter_hook``: under SPMD a ``jax.debug.callback`` fires on every
+    participating device, so per-iteration events would arrive mesh-size
+    times over.  Observability for this engine is call-level only
+    (warm-restart/fallback events from the engine driver).
     """
     n = T.shape[-1]
     if tables.n_prods == 0:
@@ -640,7 +686,9 @@ def reverse_reachable_mask(
 
 @partial(
     jax.jit,
-    static_argnames=("tables", "row_capacity", "ctx_capacity", "max_iters"),
+    static_argnames=(
+        "tables", "row_capacity", "ctx_capacity", "max_iters", "iter_hook"
+    ),
 )
 def masked_repair_closure(
     T: jnp.ndarray,
@@ -650,6 +698,7 @@ def masked_repair_closure(
     row_capacity: int = 128,
     ctx_capacity: int | None = None,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Dense-path repair fixpoint.  ``src_mask`` seeds the rows to rebuild;
     rows under ``frozen_mask`` are trusted exact and never recomputed, but
@@ -687,7 +736,9 @@ def masked_repair_closure(
         overflow = (jnp.sum(M_next, dtype=jnp.int32) > R) | (
             jnp.sum(M_next | frozen_mask, dtype=jnp.int32) > C
         )
-        grew = jnp.any(new & ~T) | jnp.any(M_next & ~M)
+        changed = new & ~T
+        grew = jnp.any(changed) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed, overflow)
         return T | new, M_next, grew, overflow, it + 1
 
     state = (T, src_mask & ~frozen_mask, jnp.bool_(True), jnp.bool_(False), 0)
@@ -697,7 +748,9 @@ def masked_repair_closure(
 
 @partial(
     jax.jit,
-    static_argnames=("tables", "row_capacity", "max_iters", "use_kernel"),
+    static_argnames=(
+        "tables", "row_capacity", "max_iters", "use_kernel", "iter_hook"
+    ),
 )
 def masked_bitpacked_repair_closure(
     T: jnp.ndarray,
@@ -707,6 +760,7 @@ def masked_bitpacked_repair_closure(
     row_capacity: int = 128,
     max_iters: int | None = None,
     use_kernel: bool = True,
+    iter_hook=None,
 ):
     """Packed-word analog of :func:`masked_repair_closure` (the bitpacked
     query engine already contracts against the full packed state; repair
@@ -743,7 +797,9 @@ def masked_bitpacked_repair_closure(
         M_next = M | (unpack_bits(reach_w, n) & ~frozen_mask)
         Tp_next = Tp | new
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
-        grew = jnp.any(Tp_next != Tp) | jnp.any(M_next & ~M)
+        changed_w = Tp_next != Tp
+        grew = jnp.any(changed_w) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed_w, overflow)
         return Tp_next, M_next, grew, overflow, it + 1
 
     state = (

@@ -140,13 +140,17 @@ def single_path_closure(
 # ---------------------------------------------------------------------- #
 
 
-@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
 def masked_single_path_closure(
     L: jnp.ndarray,
     tables: ProductionTables,
     src_mask: jnp.ndarray,
     row_capacity: int = 128,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Source-restricted single-path closure (dense min-plus path).
 
@@ -157,7 +161,7 @@ def masked_single_path_closure(
     iff ``overflowed`` is False (otherwise re-enter with the returned
     state and a larger ``row_capacity`` — the fixpoint is monotone and
     finite entries are frozen, so no work is lost)."""
-    from .closure import _active_rows, _masked_limit
+    from .closure import _active_rows, _iter_event, _masked_limit
 
     n = L.shape[-1]
     if tables.n_prods == 0:
@@ -191,6 +195,7 @@ def masked_single_path_closure(
         M_next = M | jnp.any(jnp.isfinite(rows), axis=(0, 1))
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
         grew = jnp.any(newly) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, newly, overflow)
         return L_next, M_next, grew, overflow, it + 1
 
     state = (L, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
@@ -198,13 +203,17 @@ def masked_single_path_closure(
     return L, M, overflow
 
 
-@partial(jax.jit, static_argnames=("tables", "row_capacity", "max_iters"))
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
 def masked_frontier_single_path_closure(
     L: jnp.ndarray,
     tables: ProductionTables,
     src_mask: jnp.ndarray,
     row_capacity: int = 128,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Masked single-path closure with the frontier (delta) trick: only
     min-plus products through entries discovered in the previous iteration
@@ -213,7 +222,7 @@ def masked_frontier_single_path_closure(
     delta-involving splits — a subset of all splits, so it may exceed the
     dense variant's choice, but both operands are frozen finite entries and
     the recorded sum stays extraction-exact."""
-    from .closure import _active_rows, _masked_limit
+    from .closure import _active_rows, _iter_event, _masked_limit
 
     n = L.shape[-1]
     if tables.n_prods == 0:
@@ -251,6 +260,7 @@ def masked_frontier_single_path_closure(
             jnp.isfinite(L_next) & fresh[None, :, None]
         )
         overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        _iter_event(iter_hook, it, M_next, newly, overflow)
         return L_next, D_next, M_next, overflow, it + 1
 
     D0 = jnp.isfinite(L) & src_mask[None, :, None]
@@ -365,7 +375,9 @@ def masked_opt_single_path_closure(
 
 @partial(
     jax.jit,
-    static_argnames=("tables", "row_capacity", "ctx_capacity", "max_iters"),
+    static_argnames=(
+        "tables", "row_capacity", "ctx_capacity", "max_iters", "iter_hook"
+    ),
 )
 def masked_single_path_repair_closure(
     L: jnp.ndarray,
@@ -375,6 +387,7 @@ def masked_single_path_repair_closure(
     row_capacity: int = 128,
     ctx_capacity: int | None = None,
     max_iters: int | None = None,
+    iter_hook=None,
 ):
     """Repair fixpoint for cached length states (delta subsystem; DELTA.md).
 
@@ -385,7 +398,7 @@ def masked_single_path_repair_closure(
     Served by every backend — lengths are f32, so there is no packed
     variant to specialize.  Returns ``(L, M, overflowed)``; frozen rows
     come back bit-identical (the scatter only targets active slots)."""
-    from .closure import _active_rows, _masked_limit
+    from .closure import _active_rows, _iter_event, _masked_limit
 
     n = L.shape[-1]
     if tables.n_prods == 0:
@@ -422,6 +435,7 @@ def masked_single_path_repair_closure(
             jnp.sum(M_next | frozen_mask, dtype=jnp.int32) > C
         )
         grew = jnp.any(newly) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, newly, overflow)
         return L_next, M_next, grew, overflow, it + 1
 
     state = (L, src_mask & ~frozen_mask, jnp.bool_(True), jnp.bool_(False), 0)

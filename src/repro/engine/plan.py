@@ -142,6 +142,14 @@ class PlanKey:
     cache reuse an executable only when their mesh shapes agree; the
     concrete device assignment is supplied at build time
     (:meth:`CompiledClosureCache.get`), not part of the identity.
+    ``instrumented`` selects the observability build: the loop body bakes
+    in the :func:`repro.obs.trace.emit_iteration` host callback at each
+    iteration boundary.  It IS part of the identity — a tracer that wants
+    iteration events gets a distinct executable, and the uninstrumented
+    hot path stays bit-identical to a build without observability (the
+    zero-overhead contract, tested in tests/test_obs.py).  Sharded
+    (``opt``) plans never instrument (SPMD host callbacks fire per
+    device); engine/service.py enforces that.
     """
 
     tables: ProductionTables
@@ -152,6 +160,7 @@ class PlanKey:
     ctx_capacity: int = 0
     semantics: str = "relational"
     mesh: tuple = ()
+    instrumented: bool = False
 
 
 @dataclass
@@ -230,6 +239,19 @@ class CompiledClosureCache:
 
         return mesh, MeshPlan.from_mesh(mesh)
 
+    @staticmethod
+    def _hook_kw(key: PlanKey) -> dict:
+        """``iter_hook`` kwarg of an instrumented build: the stable
+        module-level trampoline (never a per-run closure, so the
+        executable stays cacheable across tracer sessions).  The opt
+        engine has no hook parameter — service.py never requests
+        instrumented opt keys."""
+        if not key.instrumented:
+            return {}
+        from repro.obs.trace import emit_iteration
+
+        return {"iter_hook": emit_iteration}
+
     def _build(self, key: PlanKey, mesh=None):
         ctx, plan = self._lower_ctx(key, mesh)
         m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
@@ -238,7 +260,7 @@ class CompiledClosureCache:
                 (key.tables.n_nonterms, key.n, key.n), jnp.float32
             )
             if key.repair:  # one repair variant serves every backend
-                kw = {"row_capacity": key.row_capacity}
+                kw = {"row_capacity": key.row_capacity, **self._hook_kw(key)}
                 if key.ctx_capacity:
                     kw["ctx_capacity"] = key.ctx_capacity
                 return _semantics.masked_single_path_repair_closure.lower(
@@ -248,6 +270,8 @@ class CompiledClosureCache:
             kw = {"row_capacity": key.row_capacity}
             if key.engine == "opt":
                 kw["plan"] = plan
+            else:
+                kw.update(self._hook_kw(key))
             with ctx:
                 return fn.lower(L, key.tables, m, **kw).compile()
         T = jax.ShapeDtypeStruct(
@@ -255,7 +279,7 @@ class CompiledClosureCache:
         )
         if key.repair:
             fn = REPAIR_ENGINES[key.engine]
-            kw = {"row_capacity": key.row_capacity}
+            kw = {"row_capacity": key.row_capacity, **self._hook_kw(key)}
             if key.ctx_capacity:  # dense/frontier compact the contraction
                 kw["ctx_capacity"] = key.ctx_capacity
             return fn.lower(T, key.tables, m, m, **kw).compile()
@@ -263,5 +287,7 @@ class CompiledClosureCache:
         kw = {"row_capacity": key.row_capacity}
         if key.engine == "opt":
             kw["plan"] = plan
+        else:
+            kw.update(self._hook_kw(key))
         with ctx:
             return fn.lower(T, key.tables, m, **kw).compile()

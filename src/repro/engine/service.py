@@ -61,6 +61,8 @@ from repro.delta.repair import (
     repair_state,
 )
 from repro.delta.txn import EpochClock, Snapshot
+from repro.obs.instruments import EngineMetrics
+from repro.obs.trace import NULL_TRACER, iteration_scope
 
 from .config import EngineConfig
 from .plan import (
@@ -150,6 +152,8 @@ class QueryEngine:
         mesh=None,
         *,
         config: EngineConfig | None = None,
+        tracer=None,
+        metrics=None,
     ) -> None:
         legacy = {
             k: v
@@ -226,6 +230,27 @@ class QueryEngine:
         # this across their whole body.  An RLock, not a Lock — apply_delta
         # re-enters through _check_graph-triggered ingestion paths.
         self._lock = threading.RLock()
+        # Observability (repro.obs, OBSERVABILITY.md): the tracer opens
+        # planner.decide / closure.execute / delta.repair spans (nesting
+        # under whatever span is current — the serving loop's window span
+        # when driven through CFPQServer) and, when it wants iteration
+        # events, routes the engine onto *instrumented* plan keys.  The
+        # default NULL_TRACER records nothing and keeps every PlanKey
+        # uninstrumented; ``metrics`` is a MetricsRegistry (the process
+        # default when None) fed cache/closure/delta counters.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = EngineMetrics.on(metrics)
+
+    def set_tracer(self, tracer) -> None:
+        """Install a tracer after construction (the serving loop shares
+        its tracer with the engine it drives)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+
+    def set_metrics(self, registry) -> None:
+        """Re-point the engine's metric families at ``registry`` (the
+        serving loop funnels engine counters into the registry its
+        exposition endpoint serves)."""
+        self.metrics = EngineMetrics.on(registry)
 
     # ------------------------------------------------------------------ #
     def query(self, q: Query, snapshot: Snapshot | None = None) -> QueryResult:
@@ -311,83 +336,94 @@ class QueryEngine:
             delta = g.delta_since(self._version)
         stats = DeltaStats()
         if delta:
-            plan = plan_repair(g, delta, self.n)
-            for state in self._states.values():
-                state.extractor = None  # edge indices are stale
-                state.sp_paths.clear()  # memoized witnesses may walk them
+            # context-managed so repair fixpoints started inside nest
+            # under this span (planner.decide / closure.execute parents)
+            with self.tracer.span(
+                "delta.repair",
+                cat="engine",
+                inserted=len(delta.inserted),
+                deleted=len(delta.deleted),
+            ) as dsp:
+                plan = plan_repair(g, delta, self.n)
+                for state in self._states.values():
+                    state.extractor = None  # edge indices are stale
+                    state.sp_paths.clear()  # memoized witnesses may walk them
 
-                def base_rows(idx, grammar=state.grammar):
-                    return init_matrix_rows(g, grammar, idx, pad_to=self.n)
+                    def base_rows(idx, grammar=state.grammar):
+                        return init_matrix_rows(g, grammar, idx, pad_to=self.n)
 
-                if state.T is not None and state.mask is not None:
-                    T_np = (
-                        state.T_host
-                        if state.T_host is not None
-                        else np.asarray(state.T)
-                    )
-
-                    def run(T_dev, seed, frozen, tables=state.tables,
-                            st=state):
-                        seed_np = np.asarray(seed)
-                        d = self._decide(
-                            st, seed_np, seed_np, "relational", "warm",
-                            repair=True,
+                    if state.T is not None and state.mask is not None:
+                        T_np = (
+                            state.T_host
+                            if state.T_host is not None
+                            else np.asarray(state.T)
                         )
-                        st.served_by = d.engine
-                        return self._run_fixpoint(
-                            tables, T_dev, seed, frozen, decision=d
-                        )[:3]  # repair never falls back; drop the event
 
-                    T_host, T_dev, mask_new, st = repair_state(
-                        T_np, state.T, np.asarray(state.mask), plan,
-                        base_rows, run,
-                    )
-                    state.T = T_dev
-                    state.T_host = T_host
-                    state.mask = mask_new
-                    # repair entrypoints localize sharded states (eviction
-                    # to one device) and run single-device executables —
-                    # record the post-repair placement so the planner's
-                    # cache-temperature/placement feature doesn't mis-cost
-                    # the just-evicted state on the next query
-                    state.placement = placement_of(T_dev)
-                    stats.merge(st)
-                if state.sp_L is not None and state.sp_mask is not None:
-                    # single-path states repair too: insertions warm-start
-                    # the min-plus row repair (frozen rows bit-identical),
-                    # deletions evict affected rows to base lengths.
-                    L_np = (
-                        state.sp_L_host
-                        if state.sp_L_host is not None
-                        else np.asarray(state.sp_L)
-                    )
+                        def run(T_dev, seed, frozen, tables=state.tables,
+                                st=state):
+                            seed_np = np.asarray(seed)
+                            d = self._decide(
+                                st, seed_np, seed_np, "relational", "warm",
+                                repair=True,
+                            )
+                            st.served_by = d.engine
+                            return self._run_fixpoint(
+                                tables, T_dev, seed, frozen, decision=d
+                            )[:3]  # repair never falls back; drop the event
 
-                    def run_sp(L_dev, seed, frozen, tables=state.tables,
-                               st=state):
-                        seed_np = np.asarray(seed)
-                        d = self._decide(
-                            st, seed_np, seed_np, "single_path", "warm",
-                            repair=True,
+                        T_host, T_dev, mask_new, st = repair_state(
+                            T_np, state.T, np.asarray(state.mask), plan,
+                            base_rows, run,
                         )
-                        st.sp_served_by = d.engine
-                        return self._run_fixpoint(
-                            tables, L_dev, seed, frozen,
-                            semantics="single_path", decision=d,
-                        )[:3]
+                        state.T = T_dev
+                        state.T_host = T_host
+                        state.mask = mask_new
+                        # repair entrypoints localize sharded states (eviction
+                        # to one device) and run single-device executables —
+                        # record the post-repair placement so the planner's
+                        # cache-temperature/placement feature doesn't mis-cost
+                        # the just-evicted state on the next query
+                        state.placement = placement_of(T_dev)
+                        stats.merge(st)
+                    if state.sp_L is not None and state.sp_mask is not None:
+                        # single-path states repair too: insertions warm-start
+                        # the min-plus row repair (frozen rows bit-identical),
+                        # deletions evict affected rows to base lengths.
+                        L_np = (
+                            state.sp_L_host
+                            if state.sp_L_host is not None
+                            else np.asarray(state.sp_L)
+                        )
 
-                    L_host, L_dev, sp_mask, st = repair_single_path_state(
-                        L_np, state.sp_L, np.asarray(state.sp_mask), plan,
-                        base_rows, run_sp,
-                    )
-                    state.sp_L = L_dev
-                    state.sp_L_host = L_host
-                    state.sp_mask = sp_mask
-                    state.sp_placement = placement_of(L_dev)
-                    stats.merge(st)
+                        def run_sp(L_dev, seed, frozen, tables=state.tables,
+                                   st=state):
+                            seed_np = np.asarray(seed)
+                            d = self._decide(
+                                st, seed_np, seed_np, "single_path", "warm",
+                                repair=True,
+                            )
+                            st.sp_served_by = d.engine
+                            return self._run_fixpoint(
+                                tables, L_dev, seed, frozen,
+                                semantics="single_path", decision=d,
+                            )[:3]
+
+                        L_host, L_dev, sp_mask, st = repair_single_path_state(
+                            L_np, state.sp_L, np.asarray(state.sp_mask), plan,
+                            base_rows, run_sp,
+                        )
+                        state.sp_L = L_dev
+                        state.sp_L_host = L_host
+                        state.sp_mask = sp_mask
+                        state.sp_placement = placement_of(L_dev)
+                        stats.merge(st)
+                dsp.set(**stats.as_dict())
+            self.metrics.observe_delta(stats)
         self._version = g.version
         self._edge_set = frozenset(g.edges)
         self.delta_stats.merge(stats)
         self.clock.advance(g.version)
+        self.metrics.delta_epoch.set(self.clock.epoch)
         return stats
 
     # ------------------------------------------------------------------ #
@@ -587,61 +623,101 @@ class QueryEngine:
             cap_c = bucket_for(max(cap, int(mask.sum()) + n_frozen), self.n)
         calls = 0
         fallback_event: dict | None = None
-        while True:
-            exe = self.plans.get(
-                PlanKey(
-                    tables,
-                    eng_name,
-                    self.n,
-                    cap,
-                    repair=repair,
-                    ctx_capacity=cap_c,
-                    semantics=semantics,
-                    mesh=mesh_k,
-                ),
-                mesh=self.mesh,
-                provenance="pinned" if decision.pinned else "planned",
-            )
-            if repair:
-                T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)
-            else:
-                T, M, overflow = exe(T, jnp.asarray(mask))
-            calls += 1
-            if not bool(overflow):
-                break
-            mask = np.asarray(M)  # monotone warm restart, larger capacity
-            grown = int(mask.sum())
-            if fallback_event is None:
-                trigger = self.planner.should_fallback(
-                    decision, grown, self.n, calls
+        tracer = self.tracer
+        with tracer.span(
+            "closure.execute",
+            cat="engine",
+            engine=eng_name,
+            semantics=semantics,
+            repair=repair,
+            seed_rows=int(mask.sum()),
+        ) as csp:
+            while True:
+                # iteration events need an instrumented executable — a
+                # distinct PlanKey, so the untraced path keeps running the
+                # bit-identical uninstrumented build.  The opt closures
+                # take no hook (SPMD callbacks fire per device).
+                instrumented = (
+                    tracer.wants_iterations and eng_name != "opt"
                 )
-                if trigger is not None:
-                    # the pick's assumptions were violated: re-dispatch the
-                    # remaining closure onto the fallback executable at
-                    # full capacity (no work lost — same warm restart)
-                    fb = decision.fallback_engine
-                    fallback_event = {
-                        "from": eng_name,
-                        "to": fb,
-                        "trigger": trigger,
-                        "at_call": calls,
-                        "active_rows": grown,
-                    }
-                    eng_name = (
-                        sp_engine_name(fb, repair=False) if single_path else fb
+                misses_before = self.plans.stats.compile_misses
+                exe = self.plans.get(
+                    PlanKey(
+                        tables,
+                        eng_name,
+                        self.n,
+                        cap,
+                        repair=repair,
+                        ctx_capacity=cap_c,
+                        semantics=semantics,
+                        mesh=mesh_k,
+                        instrumented=instrumented,
+                    ),
+                    mesh=self.mesh,
+                    provenance="pinned" if decision.pinned else "planned",
+                )
+                self.metrics.observe_cache(
+                    hit=self.plans.stats.compile_misses == misses_before
+                )
+                with iteration_scope(
+                    tracer.iteration_sink(csp) if instrumented else None
+                ):
+                    if repair:
+                        T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)
+                    else:
+                        T, M, overflow = exe(T, jnp.asarray(mask))
+                    calls += 1
+                    if not bool(overflow):
+                        break
+                mask = np.asarray(M)  # monotone warm restart, larger capacity
+                grown = int(mask.sum())
+                if fallback_event is None:
+                    trigger = self.planner.should_fallback(
+                        decision, grown, self.n, calls
                     )
-                    mesh_k = (
-                        self._mesh_key if eng_name == "opt" else ()
-                    )
-                    T = self._place_state(T, sharded=bool(mesh_k))
-                    cap = self.n
-                    self.planner.note_fallback()
-                    continue
-            # overflow implies the active set outgrew cap or (repair) the
-            # context outgrew cap_c, so at least one bucket grows strictly
-            cap = bucket_for(max(cap, grown), self.n)
-            if cap_c:
-                cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
+                    if trigger is not None:
+                        # the pick's assumptions were violated: re-dispatch
+                        # the remaining closure onto the fallback executable
+                        # at full capacity (no work lost — same warm restart)
+                        fb = decision.fallback_engine
+                        fallback_event = {
+                            "from": eng_name,
+                            "to": fb,
+                            "trigger": trigger,
+                            "at_call": calls,
+                            "active_rows": grown,
+                        }
+                        csp.add_event(
+                            "planner.fallback",
+                            tracer.clock(),
+                            **fallback_event,
+                        )
+                        eng_name = (
+                            sp_engine_name(fb, repair=False)
+                            if single_path
+                            else fb
+                        )
+                        mesh_k = (
+                            self._mesh_key if eng_name == "opt" else ()
+                        )
+                        T = self._place_state(T, sharded=bool(mesh_k))
+                        cap = self.n
+                        self.planner.note_fallback()
+                        continue
+                # overflow implies the active set outgrew cap or (repair) the
+                # context outgrew cap_c, so at least one bucket grows strictly
+                cap = bucket_for(max(cap, grown), self.n)
+                if cap_c:
+                    cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
+                csp.add_event(
+                    "warm_restart",
+                    tracer.clock(),
+                    capacity=cap,
+                    active_rows=grown,
+                    at_call=calls,
+                )
+            csp.set(calls=calls, active_rows=int(np.asarray(M).sum()))
+        self.metrics.observe_closure(eng_name, calls)
         return T, np.asarray(M), calls, fallback_event
 
     def _ensure_rows(
@@ -670,9 +746,13 @@ class QueryEngine:
                 cur = base_lengths(cur)
             mask = np.zeros(self.n, dtype=bool)
         mask = np.asarray(mask)
-        decision = self._decide(
-            state, mask | need, need & ~mask, semantics, status
-        )
+        with self.tracer.span(
+            "planner.decide", cat="engine", semantics=semantics, cache=status
+        ) as psp:
+            decision = self._decide(
+                state, mask | need, need & ~mask, semantics, status
+            )
+            psp.set(route=decision.label, pinned=decision.pinned)
         out, M, _, fb = self._run_fixpoint(
             state.tables, cur, mask | need, semantics=semantics,
             decision=decision,

@@ -1,0 +1,50 @@
+"""repro.obs — zero-dependency tracing + metrics for the CFPQ stack.
+
+Spans from request admission down to closure fixpoint iterations
+(:mod:`repro.obs.trace`), Prometheus-style counters/gauges/histograms
+(:mod:`repro.obs.metrics`, exposition in :mod:`repro.obs.export`), and
+Chrome-trace export for Perfetto (:mod:`repro.obs.chrome`).  The operator
+guide is OBSERVABILITY.md at the repo root.
+"""
+from .chrome import to_chrome_trace, write_chrome_trace
+from .export import (
+    MetricsEndpoint,
+    render_prometheus,
+    snapshot,
+    write_metrics_json,
+)
+from .instruments import EngineMetrics, ServeMetrics
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    REGISTRY,
+)
+from .trace import (
+    NULL_TRACER,
+    Span,
+    Tracer,
+    emit_iteration,
+    iteration_scope,
+)
+
+__all__ = [
+    "Counter",
+    "EngineMetrics",
+    "Gauge",
+    "Histogram",
+    "MetricsEndpoint",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "REGISTRY",
+    "ServeMetrics",
+    "Span",
+    "Tracer",
+    "emit_iteration",
+    "iteration_scope",
+    "render_prometheus",
+    "snapshot",
+    "to_chrome_trace",
+    "write_chrome_trace",
+]

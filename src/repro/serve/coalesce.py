@@ -42,6 +42,7 @@ class BatchWindow:
         self._clock = clock
         self._items: list[Any] = []
         self._deadline: float | None = None
+        self._t_open: float | None = None
 
     def __len__(self) -> int:
         return len(self._items)
@@ -55,12 +56,20 @@ class BatchWindow:
         """Absolute clock time of the pending deadline flush, if armed."""
         return self._deadline
 
+    @property
+    def t_open(self) -> float | None:
+        """Clock time the current window opened (its first ``add``), None
+        while empty — the coalesce interval start the tracing layer
+        backdates window spans to."""
+        return self._t_open
+
     def add(self, item: Any) -> str | None:
         """Buffer one item.  The first item arms the window deadline.
         Returns ``FlushReason.SIZE`` when the buffer just reached
         ``max_batch`` (the caller must flush now), else None."""
         if not self._items:
-            self._deadline = self._clock() + self.window_s
+            self._t_open = self._clock()
+            self._deadline = self._t_open + self.window_s
         self._items.append(item)
         if len(self._items) >= self.max_batch:
             return FlushReason.SIZE
@@ -82,10 +91,12 @@ class BatchWindow:
                 del self._items[i]
                 if not self._items:
                     self._deadline = None
+                    self._t_open = None
                 return True
         return False
 
     def take(self) -> list[Any]:
         """Atomically drain the buffer and disarm the deadline."""
         items, self._items, self._deadline = self._items, [], None
+        self._t_open = None
         return items

@@ -50,11 +50,21 @@ class FlushReason:
 
 @dataclass(frozen=True)
 class ServeConfig:
-    """Knobs of the async serving loop (see module docstring)."""
+    """Knobs of the async serving loop (see module docstring).
+
+    ``metrics_port`` (with ``metrics_host``) additionally exposes the
+    server's metrics registry over HTTP — ``GET /metrics`` is Prometheus
+    text exposition, ``GET /metrics.json`` a JSON snapshot including
+    live ``ServeStats`` (repro.obs.export; OBSERVABILITY.md).  ``None``
+    (the default) starts no listener; ``0`` binds an ephemeral port
+    (read it back from ``CFPQServer.metrics_port`` after start).
+    """
 
     max_batch: int = 8
     batch_window_s: float = 0.005
     max_queue_depth: int = 256
+    metrics_host: str = "127.0.0.1"
+    metrics_port: int | None = None
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
@@ -63,6 +73,10 @@ class ServeConfig:
             raise ValueError("batch_window_s must be >= 0")
         if self.max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
+        if self.metrics_port is not None and not (
+            0 <= self.metrics_port <= 65535
+        ):
+            raise ValueError("metrics_port must be None or 0..65535")
 
 
 @dataclass

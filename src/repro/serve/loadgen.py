@@ -74,15 +74,19 @@ async def drive_open_loop(
     workload: list[Query],
     arrivals: np.ndarray,
     cfg: ServeConfig,
+    tracer=None,
+    metrics=None,
 ) -> OpenLoopRun:
     """Submit ``workload[i]`` at offset ``arrivals[i]`` through a fresh
     server over ``engine``; shed (``Overloaded``) requests are counted,
-    not retried.  Returns after every admitted request resolves."""
+    not retried.  Returns after every admitted request resolves.
+    ``tracer``/``metrics`` thread observability (repro.obs) through the
+    server — ``bench_serving.py --trace-out`` rides on this."""
     results: list = []
     shed = 0
 
     t0 = time.perf_counter()
-    async with CFPQServer(engine, cfg) as srv:
+    async with CFPQServer(engine, cfg, tracer=tracer, metrics=metrics) as srv:
 
         async def one(q: Query, at: float) -> None:
             nonlocal shed

@@ -47,6 +47,10 @@ from functools import partial
 from typing import Callable, Iterable
 
 from repro.engine import Query, QueryEngine, QueryResult, grammar_key
+from repro.obs.export import MetricsEndpoint
+from repro.obs.instruments import ServeMetrics
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 from .coalesce import BatchWindow
 from .config import FlushReason, Overloaded, ServeConfig, ServeStats
@@ -59,6 +63,8 @@ class _Pending:
     query: Query
     future: asyncio.Future
     t_admit: float
+    span: object = None  # root "request" span (admission -> resolution)
+    qspan: object = None  # "queue.wait" child (admission -> batch start)
 
 
 @dataclass
@@ -69,6 +75,7 @@ class _Route:
     gen: int = 0  # flush generation; stale deadline timers no-op
     timer: object | None = None  # asyncio.TimerHandle of the armed deadline
     due: bool = False  # deadline passed while the engine was busy
+    span: object | None = None  # open "window" span of the current window
 
 
 class CFPQServer:
@@ -80,6 +87,8 @@ class CFPQServer:
         config: ServeConfig | None = None,
         *,
         clock: Callable[[], float] = time.monotonic,
+        tracer=None,
+        metrics: MetricsRegistry | None = None,
     ) -> None:
         self.engine = engine
         self.config = config if config is not None else ServeConfig()
@@ -93,6 +102,40 @@ class CFPQServer:
         )
         self._depth = 0
         self._closed = False
+        # Observability (repro.obs; OBSERVABILITY.md): per-request spans
+        # (request -> queue.wait/window -> engine spans) plus the serving
+        # metric families.  The tracer is shared with the engine so
+        # planner/closure spans nest under this loop's window spans; the
+        # default NULL_TRACER records nothing.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics_registry = metrics if metrics is not None else REGISTRY
+        self.metrics = ServeMetrics.on(self.metrics_registry)
+        if tracer is not None:
+            engine.set_tracer(tracer)
+        if metrics is not None:
+            engine.set_metrics(metrics)
+        self._endpoint: MetricsEndpoint | None = None
+
+    # ------------------------------------------------------------------ #
+    # metrics endpoint (optional; ServeConfig.metrics_port)
+    # ------------------------------------------------------------------ #
+    @property
+    def metrics_port(self) -> int | None:
+        """Bound port of the running metrics endpoint, if any."""
+        return self._endpoint.port if self._endpoint is not None else None
+
+    async def start_metrics_endpoint(self) -> int | None:
+        """Start the HTTP exposition listener when configured (idempotent;
+        also called by ``async with``).  Returns the bound port."""
+        if self.config.metrics_port is None or self._endpoint is not None:
+            return self.metrics_port
+        self._endpoint = await MetricsEndpoint(
+            self.metrics_registry,
+            host=self.config.metrics_host,
+            port=self.config.metrics_port,
+            snapshot_extra=lambda: {"serve_stats": self.stats},
+        ).start()
+        return self._endpoint.port
 
     # ------------------------------------------------------------------ #
     # reader path
@@ -110,6 +153,7 @@ class CFPQServer:
             raise RuntimeError("CFPQServer is stopped")
         if self._depth >= self.config.max_queue_depth:
             self.stats.shed += 1
+            self.metrics.shed.inc()
             raise Overloaded(self._depth, self.config.max_queue_depth)
         # reject malformed queries at their caller, before admission — a
         # bad query inside a coalesced batch would fail the whole batch
@@ -119,6 +163,20 @@ class CFPQServer:
         key = self._route_key(query)
         self._depth += 1
         self.stats.admitted += 1
+        self.metrics.admitted.inc()
+        self.metrics.queue_depth.set(self._depth)
+        tracer = self.tracer
+        item.span = tracer.start_span(
+            "request",
+            parent=None,
+            cat="serve",
+            semantics=query.semantics,
+            start=query.start,
+            sources=len(query.sources) if query.sources is not None else -1,
+        )
+        item.qspan = tracer.start_span(
+            "queue.wait", parent=item.span, cat="serve"
+        )
         try:
             route = self._routes.get(key)
             if route is None:
@@ -131,6 +189,13 @@ class CFPQServer:
                 )
             first = route.window.empty
             reason = route.window.add(item)
+            if first:
+                # one span per window generation, opened with its first
+                # item and parented to that item's request (later items'
+                # requests link via their own queue.wait timing)
+                route.span = tracer.start_span(
+                    "window", parent=item.span, cat="serve"
+                )
             if reason is not None:  # size flush, right now
                 self._flush(key, reason)
             elif first:  # arm the deadline for this window generation
@@ -141,11 +206,23 @@ class CFPQServer:
             return await item.future
         finally:
             self._depth -= 1
+            self.metrics.queue_depth.set(self._depth)
             if item.future.cancelled():
                 # the caller went away (e.g. wait_for timeout) — if the
                 # query is still parked in its window, pull it out so it
                 # neither consumes engine work nor haunts the accounting
                 self._discard(key, item)
+            tracer.finish(item.qspan)
+            tracer.finish(
+                item.span,
+                outcome=(
+                    "cancelled"
+                    if item.future.cancelled()
+                    else "failed"
+                    if item.future.exception() is not None
+                    else "served"
+                ),
+            )
 
     def _discard(self, key: tuple, item: _Pending) -> None:
         """Remove a cancelled caller's query from its window (no-op if the
@@ -154,12 +231,15 @@ class CFPQServer:
         if route is None or not route.window.discard(item):
             return
         self.stats.cancelled += 1
+        self.metrics.observe_outcome("cancelled")
         if route.window.empty:  # disarm the now-empty window's deadline
             route.gen += 1
             route.due = False
             if route.timer is not None:
                 route.timer.cancel()
                 route.timer = None
+            self.tracer.finish(route.span, outcome="cancelled")
+            route.span = None
 
     def _route_key(self, q: Query) -> tuple:
         # the backend is fixed per engine today; it rides in the key so
@@ -184,6 +264,7 @@ class CFPQServer:
         """
         if self._closed:
             raise RuntimeError("CFPQServer is stopped")
+        t_req = self._clock()
         fence = set(self._flush_all(FlushReason.FENCE)) | set(self._inflight)
         if fence:
             # await the flushed windows AND batches already in flight — a
@@ -195,6 +276,11 @@ class CFPQServer:
         try:
             async with self._engine_lock:
                 self.stats.writes += 1
+                # fence + lock wait = how long this write lagged behind its
+                # request; the gauge tracks the freshest write's lag
+                self.engine.metrics.delta_epoch_lag.set(
+                    self._clock() - t_req
+                )
                 fn = partial(
                     self.engine.apply_delta, list(insert), list(delete)
                 )
@@ -244,16 +330,21 @@ class CFPQServer:
             route.timer.cancel()
             route.timer = None
         items = route.window.take()
+        wspan, route.span = route.span, None
         if not items:
+            self.tracer.finish(wspan, outcome="empty")
             return None
         self.stats.note_flush(reason, len(items))
+        self.metrics.observe_flush(reason, len(items))
         # pin the epoch lock-free: engine.snapshot() takes the engine's
         # threading lock, which a running closure holds for its whole
         # duration — blocking here would stall the event loop.  A torn
         # read (writer mid-advance) is benign: holds() fails in
         # _run_batch and the snapshot is re-taken under the lock.
         task = asyncio.get_running_loop().create_task(
-            self._run_batch(items, reason, self.engine.clock.snapshot())
+            self._run_batch(
+                items, reason, self.engine.clock.snapshot(), wspan
+            )
         )
         self._inflight.add(task)
         task.add_done_callback(self._inflight.discard)
@@ -266,17 +357,20 @@ class CFPQServer:
             if t is not None
         ]
 
-    async def _run_batch(self, items: list[_Pending], reason: str, snap) -> None:
+    async def _run_batch(
+        self, items: list[_Pending], reason: str, snap, wspan=None
+    ) -> None:
         try:
-            await self._run_batch_locked(items, reason, snap)
+            await self._run_batch_locked(items, reason, snap, wspan)
         finally:
             self._kick()  # dispatch windows that came due while we ran
 
     async def _run_batch_locked(
-        self, items: list[_Pending], reason: str, snap
+        self, items: list[_Pending], reason: str, snap, wspan=None
     ) -> None:
         queries = [it.query for it in items]
         loop = asyncio.get_running_loop()
+        tracer = self.tracer
         async with self._engine_lock:
             # under the lock no writer can interleave: the snapshot pins
             # the one epoch this whole batch reads, and query_batch
@@ -291,27 +385,41 @@ class CFPQServer:
             if not self.engine.clock.holds(snap):
                 snap = self.engine.snapshot()
             t0 = self._clock()
+            # batch execution starts now: the per-request queue.wait spans
+            # end here, the engine work nests under the window span (wrap
+            # carries it into the worker thread's context)
+            for it in items:
+                tracer.finish(it.qspan)
             try:
                 results = await loop.run_in_executor(
                     self._pool,
-                    partial(
-                        self.engine.query_batch,
-                        queries,
-                        snapshot=snap,
-                        stats_extra={
-                            "flush_reason": reason,
-                            "window_batch": len(items),
-                        },
+                    tracer.wrap(
+                        wspan,
+                        partial(
+                            self.engine.query_batch,
+                            queries,
+                            snapshot=snap,
+                            stats_extra={
+                                "flush_reason": reason,
+                                "window_batch": len(items),
+                            },
+                        ),
                     ),
                 )
             except BaseException as exc:  # noqa: BLE001 — forwarded, not hidden
                 self.stats.failed += len(items)
+                self.metrics.observe_outcome("failed", len(items))
+                tracer.finish(
+                    wspan, reason=reason, batch=len(items), outcome="failed"
+                )
                 for it in items:
                     if not it.future.done():
                         it.future.set_exception(exc)
                 return
             t1 = self._clock()
         self.stats.served += len(items)
+        self.metrics.observe_outcome("served", len(items))
+        self.metrics.batch_exec.observe(t1 - t0)
         if results:
             # one window == one (grammar, semantics) route == one closure
             # group, so the whole batch shares one planner decision; tally
@@ -319,11 +427,23 @@ class CFPQServer:
             self.stats.note_decision(
                 results[0].stats.planner, results[0].stats.fallback
             )
-        for it, r in zip(items, results):
-            r.stats["queue_delay_s"] = t0 - it.t_admit
-            r.stats["batch_exec_s"] = t1 - t0
-            if not it.future.done():  # caller may have gone away (cancel)
-                it.future.set_result(r)
+            planner = results[0].stats.planner
+            if planner is not None:
+                self.metrics.observe_decision(
+                    planner.get("label", "?"),
+                    results[0].stats.fallback is not None,
+                )
+        with tracer.span("scatter", parent=wspan, cat="serve") as ssp:
+            for it, r in zip(items, results):
+                r.stats["queue_delay_s"] = t0 - it.t_admit
+                r.stats["batch_exec_s"] = t1 - t0
+                self.metrics.queue_delay.observe(t0 - it.t_admit)
+                if not it.future.done():  # caller may have gone away (cancel)
+                    it.future.set_result(r)
+            ssp.set(batch=len(items))
+        tracer.finish(
+            wspan, reason=reason, batch=len(items), outcome="served"
+        )
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -350,12 +470,19 @@ class CFPQServer:
             for it in route.window.take():
                 if not it.future.done():
                     self.stats.cancelled += 1
+                    self.metrics.observe_outcome("cancelled")
                     it.future.cancel()
+            self.tracer.finish(route.span, outcome="cancelled")
+            route.span = None
         if self._inflight:
             await asyncio.gather(*self._inflight, return_exceptions=True)
         self._pool.shutdown(wait=True)
+        if self._endpoint is not None:
+            await self._endpoint.stop()
+            self._endpoint = None
 
     async def __aenter__(self) -> "CFPQServer":
+        await self.start_metrics_endpoint()
         return self
 
     async def __aexit__(self, *exc) -> None:

@@ -27,7 +27,13 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-DOCS = ["ARCHITECTURE.md", "ENGINE.md", "DELTA.md", "SERVING.md"]
+DOCS = [
+    "ARCHITECTURE.md",
+    "ENGINE.md",
+    "DELTA.md",
+    "SERVING.md",
+    "OBSERVABILITY.md",
+]
 #: docs whose ``python`` blocks must be runnable as-is (others may hold
 #: illustrative fragments)
 EXEC_DOCS = ["ARCHITECTURE.md"]
@@ -43,6 +49,14 @@ REQUIRED_ANCHORS: dict[str, list[str]] = {
         "semantics",
     ],
     "ARCHITECTURE.md": ["quickstart", "the-stack"],
+    "OBSERVABILITY.md": [
+        "span-taxonomy",
+        "iteration-events",
+        "the-zero-overhead-contract",
+        "metric-names-and-labels",
+        "exposition-format",
+        "capturing-a-trace-and-perfetto",
+    ],
 }
 
 _HEADING = re.compile(r"^(#{1,6})\s+(.*)$", re.M)

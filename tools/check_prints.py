@@ -1,0 +1,65 @@
+"""Lint: no stray ``print(`` in library code under ``src/repro/``.
+
+    PYTHONPATH=src python tools/check_prints.py
+
+Library modules must report through ``repro.obs`` (metrics/spans) or
+return values — a ``print`` in the hot path is invisible to the serving
+loop's exposition endpoint and noise in embedding applications.
+Benchmarks, examples, and tools are exempt (they are CLIs; stdout is
+their interface), as are the allowlisted CLI-style entrypoints below.
+
+The check is AST-based, not textual: it flags only real calls to the
+``print`` builtin, so identifiers like ``host_fingerprint(`` or prints
+in docstrings/comments don't false-positive.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+
+#: src/repro paths (relative, posix) allowed to print: user-facing CLI
+#: entrypoints that happen to live in the package tree
+ALLOWLIST = (
+    "launch/",
+    "roofline/analysis.py",
+)
+
+
+def find_prints(path: Path) -> list[int]:
+    """Line numbers of ``print(...)`` builtin calls in one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    return [
+        node.lineno
+        for node in ast.walk(tree)
+        if isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id == "print"
+    ]
+
+
+def main() -> int:
+    bad: list[str] = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC).as_posix()
+        if any(rel.startswith(a) for a in ALLOWLIST):
+            continue
+        for line in find_prints(path):
+            bad.append(f"src/repro/{rel}:{line}: print() in library code")
+    for msg in bad:
+        print(msg)
+    if bad:
+        print(
+            f"\n{len(bad)} stray print call(s); report through repro.obs "
+            "or move the module to the allowlist in tools/check_prints.py"
+        )
+        return 1
+    print("check_prints: OK (no stray print calls in src/repro)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
