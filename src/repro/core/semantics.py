@@ -544,6 +544,20 @@ def _masked_allpairs(T: jnp.ndarray, tables: ProductionTables) -> jnp.ndarray:
     return Tm
 
 
+def _blocksparse_allpairs(
+    T: jnp.ndarray, tables: ProductionTables
+) -> jnp.ndarray:
+    """The block-sparse masked engine with every row seeded and unbounded
+    block capacity == the all-pairs closure on occupied tiles."""
+    from . import blocksparse as _bs
+
+    n = T.shape[-1]
+    Tm, _, _ = _bs.masked_blocksparse_closure(
+        T, tables, jnp.ones((n,), jnp.bool_), row_capacity=n
+    )
+    return Tm
+
+
 def closure_engines() -> dict:
     """Dispatch table of all-pairs closure engines by name."""
     from . import closure as _closure
@@ -554,6 +568,7 @@ def closure_engines() -> dict:
         "bitpacked": _closure.bitpacked_closure,
         "opt": _closure.opt_closure,
         "masked": _masked_allpairs,
+        "blocksparse": _blocksparse_allpairs,
     }
 
 

@@ -42,6 +42,16 @@ Invariants (tested bit-exactly in tests/test_delta.py)
 Both sweeps run on the *union* of the pre- and post-delta edge sets (the
 current edges plus the deleted ones) — a sound over-approximation of either
 graph's reachability, so one adjacency serves both directions.
+
+Block-sparse states (``engine="blocksparse"``) ride the same surgery with
+mixed granularity: this module's seed/ancestor/eviction computation stays
+*row*-level (strictly finer than blocks — evicting or re-seeding a row is
+always sound), while the repair closure it dispatches to
+(``core/blocksparse.py``) runs *block*-granular — an insertion reactivates
+the bit-tiles its seed rows touch, expansion skips fully-frozen tiles, and
+frozen rows inside a reactivated tile stay bit-identical because the OR of
+recomputed entries (a subset of the exact closure) into an already-exact
+frozen row is a no-op.
 """
 from __future__ import annotations
 

@@ -29,13 +29,19 @@ class EngineConfig:
     ``engine``
         ``"auto"`` (default): the planner picks the cheapest executable
         per closure call.  A backend name (``"dense"`` / ``"frontier"`` /
-        ``"bitpacked"`` / ``"opt"``) pins it explicitly.
+        ``"bitpacked"`` / ``"opt"`` / ``"blocksparse"``) pins it
+        explicitly.
     ``mesh``
         Device mesh for sharded execution.  Requires ``engine`` to be
         ``"opt"`` (the only sharded backend) or ``"auto"`` (the planner
         may choose the sharded executable when it is cheapest).
     ``row_capacity``
-        Floor of the masked-closure capacity bucket ladder.
+        Floor of the masked-closure capacity bucket ladder.  For the
+        ``blocksparse`` backend the same ladder counts occupied *blocks*.
+    ``tile``
+        Bit-tile edge of the ``blocksparse`` backend (must be a multiple
+        of 32 that divides the padded matrix size; 32/64/128 always do).
+        Ignored by the dense-state backends.
     ``profile``
         Planner cost profile: a :class:`PlannerProfile`, a path to a
         calibrated JSON profile (``tools/calibrate_planner.py``), or
@@ -46,6 +52,7 @@ class EngineConfig:
     engine: str = "auto"
     mesh: Any = None
     row_capacity: int = 128
+    tile: int = 128
     profile: PlannerProfile | str | Path | None = None
 
     def __post_init__(self) -> None:
@@ -61,6 +68,8 @@ class EngineConfig:
             )
         if self.row_capacity < 1:
             raise ValueError("row_capacity must be >= 1")
+        if self.tile < 32 or self.tile % 32:
+            raise ValueError("tile must be a multiple of 32 (>= 32)")
 
     def resolved_profile(self) -> PlannerProfile:
         if isinstance(self.profile, PlannerProfile):

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.core import blocksparse as _blocksparse
 from repro.core import closure as _closure
 from repro.core import semantics as _semantics
 from repro.core.matrices import ProductionTables
@@ -43,11 +44,15 @@ from repro.core.matrices import ProductionTables
 #: ``opt`` is the distributed packed-exchange engine: the only backend
 #: whose executables take a mesh identity (PlanKey.mesh) and shard the
 #: compacted row block; without a mesh it runs the same math one-device.
+#: ``blocksparse`` is the tiled occupied-block engine (core/blocksparse.py):
+#: host-driven, so its cache entries are plain callables, not AOT
+#: executables — see :meth:`CompiledClosureCache._build`.
 MASKED_ENGINES = {
     "dense": _closure.masked_closure,
     "frontier": _closure.masked_frontier_closure,
     "bitpacked": _closure.masked_bitpacked_closure,
     "opt": _closure.masked_opt_closure,
+    "blocksparse": _blocksparse.masked_blocksparse_closure,
 }
 
 #: repair closure per backend — delta ingestion (frozen-row warm restart;
@@ -60,6 +65,7 @@ REPAIR_ENGINES = {
     "dense": _closure.masked_repair_closure,
     "frontier": _closure.masked_repair_closure,
     "bitpacked": _closure.masked_bitpacked_repair_closure,
+    "blocksparse": _blocksparse.masked_blocksparse_repair_closure,
 }
 
 #: masked single-path (length-annotated) closure per backend.  Lengths are
@@ -161,6 +167,10 @@ class PlanKey:
     semantics: str = "relational"
     mesh: tuple = ()
     instrumented: bool = False
+    #: bit-tile edge of block-sparse plans (``row_capacity`` then counts
+    #: occupied *blocks*, not rows); 0 for every other backend so existing
+    #: keys are unchanged.
+    tile: int = 0
 
 
 @dataclass
@@ -253,6 +263,34 @@ class CompiledClosureCache:
         return {"iter_hook": emit_iteration}
 
     def _build(self, key: PlanKey, mesh=None):
+        if key.engine == "blocksparse" and key.semantics == "relational":
+            # Host-driven engine: block discovery is dynamic sparsity that
+            # a fixed-shape AOT program cannot express, so the cache entry
+            # is a plain callable with the statics bound — the per-chunk
+            # device contraction inside it is jitted and shape-bucketed,
+            # which is where the compile reuse this cache exists for
+            # actually lives.  (Single-path blocksparse keys never reach
+            # here: sp_engine_name aliases them to dense.)
+            kw = {
+                "row_capacity": key.row_capacity,
+                "tile": key.tile or _blocksparse.DEFAULT_TILE,
+                **self._hook_kw(key),
+            }
+            if key.repair:
+
+                def exe_repair(T, src_mask, frozen_mask):
+                    return _blocksparse.masked_blocksparse_repair_closure(
+                        T, key.tables, src_mask, frozen_mask, **kw
+                    )
+
+                return exe_repair
+
+            def exe(T, src_mask):
+                return _blocksparse.masked_blocksparse_closure(
+                    T, key.tables, src_mask, **kw
+                )
+
+            return exe
         ctx, plan = self._lower_ctx(key, mesh)
         m = jax.ShapeDtypeStruct((key.n,), jnp.bool_)
         if key.semantics == "single_path":

@@ -76,6 +76,10 @@ _DEFAULT_COEF: dict[str, tuple[float, float]] = {
     "frontier": (2.4e-4, 2.5e-3),
     "bitpacked": (1.6e-3, 2.0e-3),
     "opt": (1.6e-3, 8.0e-3),
+    # host-driven per-pair tile contraction: high alpha (Python-enumerated
+    # pairs + per-chunk dispatch), moderate beta — it wins on *work*, which
+    # for this family scales with occupied blocks, not n².
+    "blocksparse": (4.0e-3, 4.0e-3),
     "sp_dense": (1.0e-3, 3.0e-3),
     "sp_frontier": (1.2e-3, 3.5e-3),
     "sp_opt": (1.0e-3, 1.0e-2),
@@ -181,6 +185,13 @@ class PlanFeatures:
     cache: str = "miss"  # hit | warm | miss (state temperature)
     placement: str = "none"  # none | local | sharded (state placement)
     mesh_devices: int = 0  # 0 = no mesh available
+    #: occupied B×B blocks of the base graph (label-blind edge-coordinate
+    #: count) and the configured tile edge.  0/0 — features absent — keeps
+    #: the blocksparse backend out of the auto candidate set entirely, so
+    #: callers that don't measure occupancy (and calibration grids fit on
+    #: the dense families) are untouched.
+    occupied_blocks: int = 0
+    tile: int = 0
 
 
 @dataclass
@@ -244,6 +255,14 @@ def _work_munits(
         work = n_prods * cap * n * w / max(devices, 1)
     elif family == "sp_opt":
         work = n_prods * cap * cap * n / max(devices, 1)
+    elif family == "blocksparse":
+        # capacity-only estimate (no occupancy feature): cap here counts
+        # blocks; each block pair is a tile³-bit contraction.  The planner's
+        # own pricing (:meth:`Planner._cost`) refines this with measured
+        # occupancy — this form exists so calibration can fit the family.
+        from repro.core.blocksparse import DEFAULT_TILE
+
+        work = n_prods * cap * DEFAULT_TILE * DEFAULT_TILE * (DEFAULT_TILE // 32)
     else:  # dense / frontier / sp_dense / sp_frontier
         work = n_prods * cap * cap * n
     return work / 1e6
@@ -272,11 +291,30 @@ class Planner:
                 out.append("opt")
             return out
         if f.repair:  # REPAIR_ENGINES families (frontier aliases dense)
-            return ["dense", "bitpacked"]
+            out = ["dense", "bitpacked"]
+            if self._blocksparse_eligible(f):
+                out.append("blocksparse")
+            return out
         out = ["dense", "frontier", "bitpacked"]
         if f.mesh_devices > 1:
             out.append("opt")
+        if self._blocksparse_eligible(f):
+            out.append("blocksparse")
         return out
+
+    @staticmethod
+    def _blocksparse_eligible(f: PlanFeatures) -> bool:
+        """The block-sparse backend is a candidate only when the caller
+        measured occupancy (features present) and the graph is big enough
+        for block skipping to matter — below ~8 tiles per edge the dense
+        engines' fixed costs always win, and pricing from an absent
+        occupancy feature would be fiction."""
+        return (
+            f.occupied_blocks > 0
+            and f.tile > 0
+            and f.n >= 8 * f.tile
+            and f.n % f.tile == 0
+        )
 
     def _family(self, backend: str, f: PlanFeatures) -> str:
         return f"sp_{backend}" if f.semantics == "single_path" else backend
@@ -291,9 +329,21 @@ class Planner:
     def _cost(self, backend: str, cap: int, f: PlanFeatures) -> float:
         alpha, beta = self.profile.alpha_beta(self._family(backend, f))
         devices = f.mesh_devices if backend == "opt" else 1
-        cost = beta + alpha * _work_munits(
-            self._family(backend, f), f.n_prods, cap, f.n, devices
-        )
+        if backend == "blocksparse" and f.occupied_blocks > 0 and f.tile > 0:
+            # priced by occupied-block count: the closure fills in more
+            # blocks than the base graph occupies (fill fudge), the mask
+            # restricts contraction to roughly cap/n of the row-blocks,
+            # and each occupied pair costs one tile³-bit contraction.
+            grid = max(f.n // f.tile, 1)
+            occ = min(f.occupied_blocks * 4.0, float(grid * grid))
+            frac = min(1.0, cap / f.n)
+            pairs = occ * frac * (occ / grid)
+            tile_work = f.tile * f.tile * (f.tile // 32)
+            cost = beta + alpha * (f.n_prods * pairs * tile_work) / 1e6
+        else:
+            cost = beta + alpha * _work_munits(
+                self._family(backend, f), f.n_prods, cap, f.n, devices
+            )
         # placement penalty: consuming a cached state somewhere other than
         # where it lives pays one host round-trip of the whole tensor
         want = "sharded" if backend == "opt" and f.mesh_devices > 1 else "local"

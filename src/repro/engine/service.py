@@ -43,6 +43,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blocksparse import (
+    occupied_block_count,
+    occupied_blocks_of_edges,
+)
 from repro.core.grammar import CNFGrammar
 from repro.core.graph import Graph
 from repro.core.matrices import (
@@ -543,6 +547,13 @@ class QueryEngine:
             mesh_devices=(
                 int(self.mesh.devices.size) if self.mesh is not None else 0
             ),
+            # label-blind base-graph occupancy (O(E) host count) prices the
+            # blocksparse candidate; the padded n is always a multiple of
+            # every legal tile, so eligibility only needs the count itself
+            occupied_blocks=occupied_blocks_of_edges(
+                self.n, self.graph.edges, self.config.tile
+            ),
+            tile=self.config.tile,
         )
         return self.planner.decide(
             f, pin=self._pin, min_capacity=self.row_capacity
@@ -615,7 +626,9 @@ class QueryEngine:
             frozen_dev = jnp.asarray(frozen)
             n_frozen = int(np.asarray(frozen).sum())
         cap = bucket_for(max(decision.row_capacity, int(mask.sum())), self.n)
-        if repair and (single_path or eng_name != "bitpacked"):
+        if repair and (
+            single_path or eng_name not in ("bitpacked", "blocksparse")
+        ):
             # dense/frontier (and every single-path) repair compacts the
             # contraction axis over active + frozen rows; the Boolean
             # bitpacked repair (also serving opt) contracts full packed
@@ -652,6 +665,11 @@ class QueryEngine:
                         semantics=semantics,
                         mesh=mesh_k,
                         instrumented=instrumented,
+                        tile=(
+                            self.config.tile
+                            if eng_name == "blocksparse"
+                            else 0
+                        ),
                     ),
                     mesh=self.mesh,
                     provenance="pinned" if decision.pinned else "planned",
@@ -705,8 +723,15 @@ class QueryEngine:
                         self.planner.note_fallback()
                         continue
                 # overflow implies the active set outgrew cap or (repair) the
-                # context outgrew cap_c, so at least one bucket grows strictly
-                cap = bucket_for(max(cap, grown), self.n)
+                # context outgrew cap_c, so at least one bucket grows strictly.
+                # Blocksparse overflows on *occupied blocks* (summed over
+                # nonterminals), which the mask's row count need not exceed —
+                # double unconditionally so the ladder always terminates
+                # (capacity >= n runs unbounded).
+                if eng_name == "blocksparse":
+                    cap = bucket_for(max(2 * cap, grown), self.n)
+                else:
+                    cap = bucket_for(max(cap, grown), self.n)
                 if cap_c:
                     cap_c = bucket_for(max(cap_c, grown + n_frozen), self.n)
                 csp.add_event(
@@ -766,6 +791,10 @@ class QueryEngine:
             state.T, state.T_host, state.mask = out, np.asarray(out), M
             state.placement = placement_of(out)
             state.served_by = served
+            if served == "blocksparse":
+                self.metrics.observe_blocksparse(
+                    occupied_block_count(state.T_host, self.config.tile)
+                )
         return status, decision, fb
 
     def _serve_relational(

@@ -41,3 +41,25 @@ def bitmm(lhs_packed: jnp.ndarray, rhs_packed: jnp.ndarray) -> jnp.ndarray:
     return bitmm_pallas(
         lhs_packed, rhs_packed, ti=ti, tw=tw, tk=tk, interpret=not _ON_TPU
     )
+
+
+#: Interpret mode runs one Python step per grid element — for the
+#: block-sparse engine that is one step per *pair*, unpayable inside a
+#: fixpoint loop.  Off-TPU, batches above this size use the jnp oracle;
+#: the Pallas tile program is still exercised by small batches and the
+#: kernel test sweep.
+_TILE_INTERPRET_PAIRS_BUDGET = 16
+
+
+def tile_bitmm(lhs_tiles: jnp.ndarray, rhs_tiles: jnp.ndarray) -> jnp.ndarray:
+    """Square-tile bitpacked Boolean matmul for the block-sparse engine:
+    (p, B, B//32) x (p, B, B//32) -> (p, B, B//32), one independent B×B
+    product per occupied block pair (the pair axis rides the Pallas grid's
+    batch dimension)."""
+    p, B, Bw = lhs_tiles.shape
+    if not _ON_TPU and p > _TILE_INTERPRET_PAIRS_BUDGET:
+        return _ref.bitmm_ref(lhs_tiles, rhs_tiles)
+    ti, tw, tk = _pick_tiles(B, B, Bw)
+    return bitmm_pallas(
+        lhs_tiles, rhs_tiles, ti=ti, tw=tw, tk=tk, interpret=not _ON_TPU
+    )

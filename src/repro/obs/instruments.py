@@ -168,6 +168,12 @@ class EngineMetrics(_Bundle):
             "Wall time the most recent delta spent fenced before apply",
             registry=registry,
         )
+        self.blocksparse_occupied_blocks = Gauge(
+            "blocksparse_occupied_blocks",
+            "Occupied bit-tiles of the last blocksparse-served closure "
+            "state (materialized memory is proportional to this)",
+            registry=registry,
+        )
         self._hit = self.cache_lookups.labels(state="hit")
         self._miss = self.cache_lookups.labels(state="miss")
 
@@ -183,3 +189,7 @@ class EngineMetrics(_Bundle):
         self.delta_rows_repaired.inc(stats.rows_repaired)
         self.delta_rows_evicted.inc(stats.rows_evicted)
         self.delta_repair_iters.inc(stats.repair_iters)
+
+    def observe_blocksparse(self, occupied: int) -> None:
+        """Record the occupied-block count of a blocksparse-served state."""
+        self.blocksparse_occupied_blocks.set(float(occupied))

@@ -107,6 +107,100 @@ def random_graph(rng: np.random.Generator, n_nodes=6, n_edges=12, n_t=2):
     return Graph(n_nodes, edges)
 
 
+# ---------------------------------------------------------------------- #
+# Sparse-graph generators — shared by the block-sparse differential tests
+# (tests/test_blocksparse.py) and the scaling benchmarks
+# (benchmarks/bench_scaling.py), so both exercise identical topology
+# families at controlled densities.
+# ---------------------------------------------------------------------- #
+
+
+def chain_graph(n_nodes: int, labels=("t0", "t1"), stride: int = 1) -> Graph:
+    """A labeled chain 0 -> stride -> 2·stride -> …, labels alternating —
+    the minimal-density family (density == 1 edge/node), whose closure
+    stays banded: the worst case for dense padding, the best for tiles."""
+    edges = []
+    for k, i in enumerate(range(0, n_nodes - stride, stride)):
+        edges.append((i, labels[k % len(labels)], i + stride))
+    return Graph(n_nodes, edges)
+
+
+def community_graph(
+    rng: np.random.Generator,
+    n_nodes: int,
+    n_communities: int = 8,
+    intra_density: float = 2.0,
+    inter_edges: int = 4,
+    labels=("t0", "t1"),
+) -> Graph:
+    """Dense little communities, sparse bridges: edges cluster into
+    ``n_communities`` node ranges (``intra_density`` edges per node inside
+    each) plus ``inter_edges`` random cross-community bridges.  Occupied
+    blocks concentrate on the diagonal — the regime block-sparse states
+    are built for."""
+    size = max(n_nodes // n_communities, 1)
+    edges = []
+    for c in range(n_communities):
+        lo = c * size
+        hi = min(lo + size, n_nodes)
+        if hi - lo < 2:
+            continue
+        for _ in range(int(intra_density * (hi - lo))):
+            i, j = rng.integers(lo, hi, size=2)
+            edges.append((int(i), labels[rng.integers(len(labels))], int(j)))
+    for _ in range(inter_edges):
+        i, j = rng.integers(0, n_nodes, size=2)
+        edges.append((int(i), labels[rng.integers(len(labels))], int(j)))
+    return Graph(n_nodes, edges)
+
+
+def power_law_graph(
+    rng: np.random.Generator,
+    n_nodes: int,
+    n_edges: int,
+    exponent: float = 1.5,
+    labels=("t0", "t1"),
+) -> Graph:
+    """Preferential-attachment-flavored sparse graph: endpoint popularity
+    follows ``rank^-exponent``, giving a few hub rows and a long tail of
+    near-empty ones (web/social-graph shape; hubs make some row-blocks hot
+    while most tiles stay empty)."""
+    ranks = np.arange(1, n_nodes + 1, dtype=np.float64)
+    p = ranks**-exponent
+    p /= p.sum()
+    src = rng.choice(n_nodes, size=n_edges, p=p)
+    dst = rng.choice(n_nodes, size=n_edges, p=p)
+    lab = rng.integers(0, len(labels), size=n_edges)
+    edges = [
+        (int(i), labels[int(k)], int(j)) for i, j, k in zip(src, dst, lab)
+    ]
+    return Graph(n_nodes, edges)
+
+
+SPARSE_FAMILIES = ("chain", "community", "power_law")
+
+
+def sparse_graph(
+    family: str, rng: np.random.Generator, n_nodes: int, density: float = 1.0
+) -> Graph:
+    """One generator entry point keyed by family name, scaled to roughly
+    ``density`` edges per node (chain ignores density — it is 1 by
+    construction)."""
+    if family == "chain":
+        return chain_graph(n_nodes)
+    if family == "community":
+        return community_graph(
+            rng,
+            n_nodes,
+            n_communities=max(n_nodes // 64, 2),
+            intra_density=density,
+            inter_edges=max(int(0.05 * density * n_nodes), 2),
+        )
+    if family == "power_law":
+        return power_law_graph(rng, n_nodes, int(density * n_nodes))
+    raise ValueError(f"unknown sparse family {family!r}")
+
+
 def masked_oracle_run(
     T0,
     tables,

@@ -97,3 +97,29 @@ def test_upper_approximation_hypothesis():
     assert (0, 2) in evaluate(graph, g, "S")
     # on a plain "aa" chain the conjunction correctly fails
     assert (0, 2) not in evaluate(_chain("aa"), g, "S")
+
+
+@pytest.mark.xfail(
+    raises=Exception,
+    strict=True,
+    reason=(
+        "conjunctive closure is still a standalone function: QueryEngine's "
+        "grammar_key reads CNFGrammar fields (binary_prods/nonterms/"
+        "term_prods/nullable) that ConjunctiveGrammar lacks, so conjunctive "
+        "queries cannot be served through the engine dispatch yet.  This is "
+        "the red/green anchor for the ROADMAP 'Conjunctive-grammar "
+        "workloads' item — when the engine grows a conjunctive semantics, "
+        "this test starts passing (strict xfail flips to XPASS=failure, "
+        "forcing the marker's removal)."
+    ),
+)
+def test_engine_dispatch_serves_conjunctive_grammar():
+    """Pin today's unserved behavior: serving the a^n b^n c^n conjunctive
+    grammar through QueryEngine should match the standalone evaluator."""
+    from repro.engine import Query, QueryEngine
+
+    graph = _chain("aabbcc")
+    eng = QueryEngine(graph)
+    result = eng.query(Query(ABC, "S", sources=(0,)))
+    want = {(i, j) for (i, j) in evaluate(graph, ABC, "S") if i == 0}
+    assert result.pairs == want

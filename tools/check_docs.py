@@ -41,6 +41,7 @@ EXEC_DOCS = ["ARCHITECTURE.md"]
 REQUIRED_ANCHORS: dict[str, list[str]] = {
     "ENGINE.md": [
         "backends",
+        "block-sparse-state",
         "choosing-a-backend",
         "decision-features",
         "profile-file-format",
