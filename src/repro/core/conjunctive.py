@@ -55,7 +55,13 @@ class ConjunctiveGrammar:
                 names.append(n)
             return names.index(n)
 
-        for a, _ in conjunctive_rules:
+        for a, pairs in conjunctive_rules:
+            if not pairs:
+                raise ValueError(
+                    f"conjunctive rule for {a!r} has no conjuncts; a "
+                    "production A -> &_k (B_k C_k) needs at least one "
+                    "(B, C) pair (an empty AND would derive everything)"
+                )
             idx(a)
         for x, lhss in terminal_rules.items():
             for a in lhss:
@@ -63,14 +69,93 @@ class ConjunctiveGrammar:
         term = tuple(
             (x, idx(a)) for x, lhss in terminal_rules.items() for a in lhss
         )
+
+        def dedupe(pairs):
+            # duplicate conjuncts are idempotent under AND — drop them so
+            # the closure doesn't pay for redundant products (and so the
+            # planner's conjunct-count pricing reflects real work)
+            seen: set[tuple[int, int]] = set()
+            out = []
+            for b, c in pairs:
+                bc = (idx(b), idx(c))
+                if bc not in seen:
+                    seen.add(bc)
+                    out.append(bc)
+            return tuple(out)
+
         conj = tuple(
-            (idx(a), tuple((idx(b), idx(c)) for b, c in pairs))
-            for a, pairs in conjunctive_rules
+            (idx(a), dedupe(pairs)) for a, pairs in conjunctive_rules
         )
         return cls(tuple(names), term, conj)
 
     def index_of(self, name: str) -> int:
         return self.nonterms.index(name)
+
+    @property
+    def nullable(self) -> frozenset:
+        """CNF-like conjunctive grammars have no epsilon rules; the empty
+        set keeps the engine's result slicing uniform across grammars."""
+        return frozenset()
+
+
+@dataclass(frozen=True)
+class ConjunctiveTables:
+    """Device-ready index form of a conjunctive grammar — the analog of
+    :class:`repro.core.matrices.ProductionTables` for PlanKey identity.
+
+    Stored as tuples so the whole object is hashable and usable as a
+    static argument of the jitted masked conjunctive closures
+    (core/semantics.py).  Conjuncts are flattened: conjunct position ``k``
+    contracts ``T[conj_b[k]] x T[conj_c[k]]`` and belongs to production
+    ``prod_of[k]``, whose LHS is ``a_idx[prod_of[k]]``.
+    """
+
+    a_idx: tuple[int, ...]  # LHS nonterminal per production
+    conj_b: tuple[int, ...]  # flattened conjunct operands
+    conj_c: tuple[int, ...]
+    prod_of: tuple[int, ...]  # production position per flattened conjunct
+    n_nonterms: int
+
+    @classmethod
+    def from_grammar(cls, g: ConjunctiveGrammar) -> "ConjunctiveTables":
+        prods = sorted(g.conj_prods)
+        a_idx, conj_b, conj_c, prod_of = [], [], [], []
+        for p, (a, pairs) in enumerate(prods):
+            a_idx.append(a)
+            for b, c in pairs:
+                conj_b.append(b)
+                conj_c.append(c)
+                prod_of.append(p)
+        return cls(
+            tuple(a_idx),
+            tuple(conj_b),
+            tuple(conj_c),
+            tuple(prod_of),
+            len(g.nonterms),
+        )
+
+    @property
+    def n_prods(self) -> int:
+        return len(self.a_idx)
+
+    @property
+    def n_conjuncts(self) -> int:
+        return len(self.conj_b)
+
+    def conj_groups(self) -> dict[int, list[int]]:
+        """Production position -> flattened conjunct positions (for the
+        trace-time AND trees of the masked closures)."""
+        out: dict[int, list[int]] = {}
+        for k, p in enumerate(self.prod_of):
+            out.setdefault(p, []).append(k)
+        return out
+
+    def lhs_groups(self) -> dict[int, list[int]]:
+        """LHS nonterminal -> production positions (for the OR trees)."""
+        out: dict[int, list[int]] = {}
+        for p, a in enumerate(self.a_idx):
+            out.setdefault(a, []).append(p)
+        return out
 
 
 def init_matrix(graph: Graph, g: ConjunctiveGrammar, pad_to: int | None = None):
@@ -87,6 +172,30 @@ def init_matrix(graph: Graph, g: ConjunctiveGrammar, pad_to: int | None = None):
         for a in by_label.get(x, ()):
             T[a, i, j] = True
     return jnp.asarray(T)
+
+
+def init_matrix_rows(
+    graph: Graph, g: ConjunctiveGrammar, rows, pad_to: int | None = None
+):
+    """Base-matrix rows for a subset of source nodes — the conjunctive
+    analog of :func:`repro.core.matrices.init_matrix_rows`, used by the
+    engine's insert-only delta repair of conjunctive states."""
+    import numpy as np
+
+    from .matrices import padded_size
+
+    n = pad_to if pad_to is not None else padded_size(graph.n_nodes)
+    by_label: dict[str, list[int]] = {}
+    for x, a in g.term_prods:
+        by_label.setdefault(x, []).append(a)
+    pos = {int(r): k for k, r in enumerate(rows)}
+    out = np.zeros((len(g.nonterms), len(pos), n), dtype=bool)
+    for i, x, j in graph.edges:
+        k = pos.get(i)
+        if k is not None:
+            for a in by_label.get(x, ()):
+                out[a, k, j] = True
+    return out
 
 
 def _bool_matmul(lhs, rhs):

@@ -444,6 +444,183 @@ def masked_single_path_repair_closure(
 
 
 # ---------------------------------------------------------------------- #
+# Source-restricted (masked) conjunctive closures — the engine workload
+# for ``semantics="conjunctive"`` (ENGINE.md#conjunctive).
+#
+# Per iteration:  new[A] = OR_prods-of-A ( AND_conjuncts ( T[b] x T[c] ) )
+# over the compacted active-row block — the conjunctive generalization of
+# closure.masked_closure with the identical state/mask/overflow contract.
+# The masked-row exactness argument carries over: soundness because AND of
+# monotone products is monotone, completeness by the same induction as the
+# Boolean engine (every contraction column k of an active row joins M via
+# M_next before the k-row's entries are needed exact).  The frontier
+# (delta-only) trick is UNSOUND under AND — a conjunct's delta product
+# misses pairs whose other conjuncts completed in earlier iterations — so
+# there is no frontier variant; the engine aliases frontier to dense
+# (plan.conj_engine_name).  Warm restarts on overflow are monotone for the
+# same reason the relational ones are: the cached T is a subset of the
+# fixpoint, and re-entering with a larger capacity only grows it.
+# ---------------------------------------------------------------------- #
+
+
+def _conj_combine(prod, tables):
+    """Fold per-conjunct products into per-nonterminal planes: AND over
+    each production's conjuncts, then OR over productions per LHS.
+
+    ``prod`` has one leading plane per flattened conjunct (see
+    :class:`~repro.core.conjunctive.ConjunctiveTables`).  Works on bool
+    planes (dense path) and packed uint32 words (bitpacked path) alike —
+    ``&``/``|`` are logical on the former and bitwise on the latter, the
+    same fold bit-by-bit.  The reduce trees are built at trace time from
+    the static tables (conjunct counts are grammar-sized)."""
+    conj_groups = tables.conj_groups()
+    lhs_groups = tables.lhs_groups()
+    zero = jnp.zeros(prod.shape[1:], prod.dtype)
+    planes = []
+    for a in range(tables.n_nonterms):
+        terms = []
+        for p in lhs_groups.get(a, ()):
+            ks = conj_groups[p]
+            t = prod[ks[0]]
+            for k in ks[1:]:
+                t = t & prod[k]
+            terms.append(t)
+        if not terms:
+            planes.append(zero)
+            continue
+        plane = terms[0]
+        for t in terms[1:]:
+            plane = plane | t
+        planes.append(plane)
+    return jnp.stack(planes)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
+def masked_conjunctive_closure(
+    T: jnp.ndarray,
+    tables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    iter_hook=None,
+):
+    """Source-restricted conjunctive closure on the dense MXU path.
+
+    ``T`` is the (N, n, n) bool state (``conjunctive.init_matrix`` output
+    or a cached state for a warm restart), ``tables`` a
+    :class:`~repro.core.conjunctive.ConjunctiveTables`, ``src_mask`` the
+    (n,) bool row seed.  Returns ``(T, M, overflowed)``; rows of ``T``
+    under ``M`` equal the all-pairs :func:`~repro.core.conjunctive.
+    conjunctive_closure` rows iff ``overflowed`` is False (otherwise
+    re-enter with the returned state and a larger ``row_capacity``)."""
+    from .closure import _active_rows, _bool_matmul, _iter_event, _masked_limit
+
+    n = T.shape[-1]
+    if tables.n_conjuncts == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.conj_b, jnp.int32)
+    c_idx = jnp.asarray(tables.conj_c, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        T, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = T[:, idx, :] & valid[None, :, None]  # (N, R, n) active rows
+        # compact the contraction axis too: only rows in M can contribute
+        lhs = rows[b_idx][:, :, idx] & valid[None, None, :]  # (K, R, R)
+        prod = _bool_matmul(lhs, rows[c_idx])  # (K, R, n) per conjunct
+        new_r = _conj_combine(prod, tables) & valid[None, :, None]
+        new = jnp.zeros_like(T).at[:, idx, :].max(new_r)
+        M_next = M | jnp.any(rows, axis=(0, 1))  # columns reached -> rows
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        changed = new & ~T
+        grew = jnp.any(changed) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed, overflow)
+        return T | new, M_next, grew, overflow, it + 1
+
+    state = (T, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    T, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return T, M, overflow
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "tables", "row_capacity", "max_iters", "use_kernel", "iter_hook"
+    ),
+)
+def masked_bitpacked_conjunctive_closure(
+    T: jnp.ndarray,
+    tables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    use_kernel: bool = True,
+    iter_hook=None,
+):
+    """Source-restricted conjunctive closure on packed words: each
+    conjunct contracts the (K, R, w) gather of active rows against the
+    full (K, n, w) packed state via the rectangular bitmm path, then the
+    AND/OR fold runs bitwise on the packed products.  Contracting against
+    base-only rows stays sound under AND — every per-conjunct product
+    over a subset state is a subset of the true product, and an AND of
+    subsets is a subset of the true AND — and at the joint fixpoint the
+    masked rows match the dense variant bit-for-bit (any usable split
+    column of an active row has joined M and converged)."""
+    from .closure import _active_rows, _iter_event, _masked_limit
+    from .matrices import pack_bits, unpack_bits
+
+    n = T.shape[-1]
+    if tables.n_conjuncts == 0:
+        return T, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.conj_b, jnp.int32)
+    c_idx = jnp.asarray(tables.conj_c, jnp.int32)
+    limit = _masked_limit(T, max_iters)
+    mm = kops.bitmm if use_kernel else kref.bitmm_ref
+    Tp0 = pack_bits(T)  # (N, n, w)
+
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        Tp, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], Tp[:, idx, :], 0)  # (N, R, w)
+        prod = mm(rows[b_idx], Tp[c_idx])  # (K, R, w) per conjunct
+        new_r = jnp.where(
+            valid[None, :, None], _conj_combine(prod, tables), 0
+        )
+        new = jnp.zeros_like(Tp).at[:, idx, :].max(new_r)
+        reach_w = jax.lax.reduce(
+            rows, jnp.uint32(0), jax.lax.bitwise_or, (0, 1)
+        )  # (w,) packed columns reached from active rows
+        M_next = M | unpack_bits(reach_w, n)
+        Tp_next = Tp | new
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        changed_w = Tp_next != Tp  # changed words (packed growth unit)
+        grew = jnp.any(changed_w) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed_w, overflow)
+        return Tp_next, M_next, grew, overflow, it + 1
+
+    state = (Tp0, src_mask, jnp.bool_(True), jnp.bool_(False), 0)
+    Tp, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return unpack_bits(Tp, n), M, overflow
+
+
+# ---------------------------------------------------------------------- #
 # Witness-path reconstruction ("simple search" of Theorem 5), host-side.
 # ---------------------------------------------------------------------- #
 

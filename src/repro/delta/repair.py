@@ -111,23 +111,33 @@ class DeltaStats:
     ``rows_repaired`` counts rows whose exactness the repair fixpoint
     (re-)established, ``rows_evicted`` cached rows dropped to base by a
     deletion, ``repair_iters`` closure-executable invocations (including
-    capacity-overflow re-entries).
+    capacity-overflow re-entries).  ``conj_repairs`` / ``conj_drops``
+    record which side of the conjunctive delta contract ran per cached
+    conjunctive state: insert-only warm re-seed repair, or the full state
+    drop that any deletion forces (AND is non-monotone under row
+    eviction; DELTA.md#conjunctive-states).
     """
 
     rows_repaired: int = 0
     rows_evicted: int = 0
     repair_iters: int = 0
+    conj_repairs: int = 0
+    conj_drops: int = 0
 
     def merge(self, other: "DeltaStats") -> None:
         self.rows_repaired += other.rows_repaired
         self.rows_evicted += other.rows_evicted
         self.repair_iters += other.repair_iters
+        self.conj_repairs += other.conj_repairs
+        self.conj_drops += other.conj_drops
 
     def as_dict(self) -> dict:
         return {
             "rows_repaired": self.rows_repaired,
             "rows_evicted": self.rows_evicted,
             "repair_iters": self.repair_iters,
+            "conj_repairs": self.conj_repairs,
+            "conj_drops": self.conj_drops,
         }
 
 

@@ -8,6 +8,7 @@ default ``engine="auto"`` routes every closure call through the
 cost-based :class:`Planner` (planner.py), and per-request statistics are
 the typed :class:`QueryStats` (stats.py).
 """
+from repro.core.conjunctive import ConjunctiveGrammar
 from repro.delta.repair import DeltaStats
 from repro.delta.txn import Snapshot, StaleSnapshotError
 
@@ -24,6 +25,7 @@ from .stats import QueryStats
 
 __all__ = [
     "CompiledClosureCache",
+    "ConjunctiveGrammar",
     "DeltaStats",
     "ENGINE_CHOICES",
     "EngineConfig",

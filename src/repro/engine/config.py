@@ -30,7 +30,10 @@ class EngineConfig:
         ``"auto"`` (default): the planner picks the cheapest executable
         per closure call.  A backend name (``"dense"`` / ``"frontier"`` /
         ``"bitpacked"`` / ``"opt"`` / ``"blocksparse"``) pins it
-        explicitly.
+        explicitly.  Every choice also serves ``semantics="conjunctive"``
+        queries — backends without a conjunctive variant alias onto the
+        dense/bitpacked conjunctive executables
+        (:func:`repro.engine.plan.conj_engine_name`).
     ``mesh``
         Device mesh for sharded execution.  Requires ``engine`` to be
         ``"opt"`` (the only sharded backend) or ``"auto"`` (the planner

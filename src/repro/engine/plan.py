@@ -78,6 +78,29 @@ SP_ENGINES = {
     "opt": _semantics.masked_opt_single_path_closure,
 }
 
+#: masked conjunctive closure per backend (``semantics="conjunctive"``).
+#: Only two real variants exist: the dense MXU path and the packed-word
+#: path.  The frontier (delta) trick is unsound under AND — a conjunct's
+#: delta-only product misses pairs whose other conjuncts completed in
+#: earlier iterations — and the opt/blocksparse treatments have no
+#: conjunctive variant yet, so :func:`conj_engine_name` aliases every
+#: backend onto these two executables.
+CONJ_ENGINES = {
+    "dense": _semantics.masked_conjunctive_closure,
+    "bitpacked": _semantics.masked_bitpacked_conjunctive_closure,
+}
+
+
+def conj_engine_name(engine: str) -> str:
+    """Backend name to key conjunctive plans under: packed backends
+    (bitpacked, opt, blocksparse) alias to the bitpacked conjunctive
+    executable, everything else (dense, frontier) to the dense one —
+    chosen so PlanKeys collapse exactly where the underlying closure
+    function is shared (conjunctive plans never carry a mesh: there is
+    no sharded conjunctive variant)."""
+    return "bitpacked" if engine in ("bitpacked", "opt", "blocksparse") \
+        else "dense"
+
 
 def sp_engine_name(engine: str, repair: bool = False) -> str:
     """Backend name to key single-path plans under, chosen so PlanKeys
@@ -140,8 +163,13 @@ class PlanKey:
     frozen rows) on the dense/frontier backends; 0 when unused.
     ``semantics`` selects the state algebra: ``"relational"`` executables
     run on the (N, n, n) bool matrix, ``"single_path"`` ones on the
-    (N, n, n) f32 length matrix (isfinite == the Boolean closure), with
-    otherwise identical signatures.
+    (N, n, n) f32 length matrix (isfinite == the Boolean closure), and
+    ``"conjunctive"`` ones on the bool matrix under the AND-of-products
+    iteration — their ``tables`` is a
+    :class:`~repro.core.conjunctive.ConjunctiveTables`, whose value hash
+    covers the conjunct structure, so two conjunctive grammars share an
+    executable exactly when their index form coincides.  Signatures are
+    otherwise identical.
     ``mesh`` is the mesh identity for sharded (``opt``) executables — the
     ``(axis_name, size)`` tuple of the device mesh the plan partitions
     over, ``()`` for single-device plans.  Two engines sharing a plans
@@ -312,6 +340,17 @@ class CompiledClosureCache:
                 kw.update(self._hook_kw(key))
             with ctx:
                 return fn.lower(L, key.tables, m, **kw).compile()
+        if key.semantics == "conjunctive":
+            # ``key.tables`` is a ConjunctiveTables here; conjunctive plans
+            # never carry repair/mesh — insert repair re-enters the ordinary
+            # masked closure (delta/DELTA.md#conjunctive-states) and there
+            # is no sharded conjunctive variant.
+            T = jax.ShapeDtypeStruct(
+                (key.tables.n_nonterms, key.n, key.n), jnp.bool_
+            )
+            fn = CONJ_ENGINES[key.engine]
+            kw = {"row_capacity": key.row_capacity, **self._hook_kw(key)}
+            return fn.lower(T, key.tables, m, **kw).compile()
         T = jax.ShapeDtypeStruct(
             (key.tables.n_nonterms, key.n, key.n), jnp.bool_
         )

@@ -192,6 +192,11 @@ class PlanFeatures:
     #: the dense families) are untouched.
     occupied_blocks: int = 0
     tile: int = 0
+    #: flattened conjunct count of a conjunctive grammar — the work
+    #: multiplier for ``semantics="conjunctive"`` (each conjunct is one
+    #: full contraction per iteration, exactly like a binary production);
+    #: 0 for every other semantics so existing features are unchanged.
+    conjuncts: int = 0
 
 
 @dataclass
@@ -207,11 +212,18 @@ class PlanDecision:
     fallback_engine: str | None = None  # mid-closure re-dispatch target
     pinned: bool = False  # caller pinned the backend; no fallback
     profile_fitted: bool = False
+    semantics: str = "relational"
 
     @property
     def label(self) -> str:
         tag = f"{self.engine}:{self.mode}"
-        return tag + "+mesh" if self.sharded else tag
+        if self.sharded:
+            tag += "+mesh"
+        # only the conjunctive route is labeled: relational/single_path
+        # keep their pre-existing labels (dashboards key on them)
+        if self.semantics == "conjunctive":
+            tag += "+conjunctive"
+        return tag
 
     def to_dict(self) -> dict:
         return {
@@ -226,6 +238,7 @@ class PlanDecision:
             "fallback_engine": self.fallback_engine,
             "pinned": self.pinned,
             "profile_fitted": self.profile_fitted,
+            "semantics": self.semantics,
             "label": self.label,
         }
 
@@ -283,6 +296,12 @@ class Planner:
 
     # ------------------------------------------------------------------ #
     def _candidate_backends(self, f: PlanFeatures) -> list[str]:
+        if f.semantics == "conjunctive":
+            # the two real conjunctive executables (plan.CONJ_ENGINES);
+            # frontier is unsound under AND, opt/blocksparse have no
+            # conjunctive variant (conjunctive states never repair via
+            # the planner — delete is a full drop, insert re-enters here)
+            return ["dense", "bitpacked"]
         if f.semantics == "single_path":
             if f.repair:  # one repair fn serves every backend (keys dense)
                 return ["dense"]
@@ -341,8 +360,16 @@ class Planner:
             tile_work = f.tile * f.tile * (f.tile // 32)
             cost = beta + alpha * (f.n_prods * pairs * tile_work) / 1e6
         else:
+            # conjunctive work scales with the flattened conjunct count —
+            # each conjunct is one full contraction per iteration, exactly
+            # like a binary production on the other semantics
+            n_units = (
+                f.conjuncts
+                if f.semantics == "conjunctive" and f.conjuncts
+                else f.n_prods
+            )
             cost = beta + alpha * _work_munits(
-                self._family(backend, f), f.n_prods, cap, f.n, devices
+                self._family(backend, f), n_units, cap, f.n, devices
             )
         # placement penalty: consuming a cached state somewhere other than
         # where it lives pays one host round-trip of the whole tensor
@@ -377,6 +404,7 @@ class Planner:
                 fallback_engine=None,
                 pinned=True,
                 profile_fitted=self.profile.fitted,
+                semantics=f.semantics,
             )
             self.stats.note(d)
             return d
@@ -428,6 +456,7 @@ class Planner:
             fallback_engine=fallback,
             pinned=False,
             profile_fitted=self.profile.fitted,
+            semantics=f.semantics,
         )
         self.stats.note(d)
         return d

@@ -47,6 +47,9 @@ from repro.core.blocksparse import (
     occupied_block_count,
     occupied_blocks_of_edges,
 )
+from repro.core.conjunctive import ConjunctiveGrammar, ConjunctiveTables
+from repro.core.conjunctive import init_matrix as conj_init_matrix
+from repro.core.conjunctive import init_matrix_rows as conj_init_matrix_rows
 from repro.core.grammar import CNFGrammar
 from repro.core.graph import Graph
 from repro.core.matrices import (
@@ -73,6 +76,7 @@ from .plan import (
     CompiledClosureCache,
     PlanKey,
     bucket_for,
+    conj_engine_name,
     mesh_key_of,
     repair_engine_name,
     sp_engine_name,
@@ -81,8 +85,19 @@ from .planner import PlanDecision, PlanFeatures, Planner
 from .stats import QueryStats
 
 
-def grammar_key(g: CNFGrammar):
-    """Value identity of a CNF grammar (CNFGrammar itself is mutable)."""
+def grammar_key(g: CNFGrammar | ConjunctiveGrammar):
+    """Value identity of a grammar (CNFGrammar itself is mutable).
+
+    Conjunctive grammars key under a distinct leading tag with their full
+    conjunct structure, so a CNF grammar and a conjunctive one can never
+    collide even if their nonterminal/terminal tables coincide."""
+    if isinstance(g, ConjunctiveGrammar):
+        return (
+            "conjunctive",
+            g.nonterms,
+            tuple(sorted(g.term_prods)),
+            g.conj_prods,
+        )
     return (
         tuple(g.nonterms),
         tuple(sorted((x, tuple(v)) for x, v in g.term_prods.items())),
@@ -97,11 +112,13 @@ class Query:
 
     ``sources=None`` asks for the all-pairs relation; otherwise only pairs
     whose source is listed are computed/returned.  ``semantics`` is
-    ``"relational"`` (pair set) or ``"single_path"`` (one witness path per
-    pair, paper Section 5).
+    ``"relational"`` (pair set), ``"single_path"`` (one witness path per
+    pair, paper Section 5), or ``"conjunctive"`` (upper-approximate
+    intersection relations, paper Section 7 — requires a
+    :class:`~repro.core.conjunctive.ConjunctiveGrammar`).
     """
 
-    grammar: CNFGrammar
+    grammar: CNFGrammar | ConjunctiveGrammar
     start: str
     sources: tuple[int, ...] | None = None
     semantics: str = "relational"
@@ -290,10 +307,12 @@ class QueryEngine:
             for (gkey, semantics), qidx in groups.items():
                 state = self._state_for(gkey, queries[qidx[0]].grammar)
                 batch = [queries[i] for i in qidx]
-                if semantics == "relational":
-                    outs = self._serve_relational(state, batch)
-                else:
+                if semantics == "single_path":
                     outs = self._serve_single_path(state, batch)
+                else:  # relational and conjunctive share the bool-state path
+                    outs = self._serve_relational(
+                        state, batch, semantics=semantics
+                    )
                 for i, out in zip(qidx, outs):
                     results[i] = out
             for out in results:
@@ -352,6 +371,14 @@ class QueryEngine:
                 for state in self._states.values():
                     state.extractor = None  # edge indices are stale
                     state.sp_paths.clear()  # memoized witnesses may walk them
+
+                    if isinstance(state.tables, ConjunctiveTables):
+                        # conjunctive states have their own delta contract
+                        # (DELTA.md#conjunctive-states): insert-only = warm
+                        # re-seed, any delete = full drop (AND is
+                        # non-monotone under row eviction)
+                        self._repair_conjunctive(state, delta, plan, stats)
+                        continue
 
                     def base_rows(idx, grammar=state.grammar):
                         return init_matrix_rows(g, grammar, idx, pad_to=self.n)
@@ -430,6 +457,71 @@ class QueryEngine:
         self.metrics.delta_epoch.set(self.clock.epoch)
         return stats
 
+    def _repair_conjunctive(
+        self, state: _GrammarState, delta, plan, stats: DeltaStats
+    ) -> None:
+        """Apply one delta to a cached conjunctive state (the conjunctive
+        side of the delta contract, DELTA.md#conjunctive-states).
+
+        **Any deletion drops the whole state.**  The row-repair machinery
+        of the other semantics evicts affected rows and recontracts them
+        against trusted frozen rows — but under AND a frozen row is not
+        trustworthy context: removing one conjunct's support can retract
+        entries in rows the reverse-reachability blast radius never
+        touches through the *other* conjuncts' dependencies, so there is
+        no sound frozen set short of everything.  Dropping is principled,
+        not lazy.
+
+        **Insert-only deltas repair by warm re-seed.**  Inserts only grow
+        the fixpoint (AND of monotone products is monotone), so the cached
+        state is a valid warm start: OR the new base edges into the
+        inserted-source rows, then re-enter the ordinary masked
+        conjunctive closure seeded with the affected rows (ancestors of
+        inserted sources) plus the sources themselves.  Previously-exact
+        rows re-converge instantly; no repair-variant executable exists
+        or is needed.
+        """
+        if state.T is None or state.mask is None:
+            return
+        if delta.deleted:
+            stats.rows_evicted += int(np.asarray(state.mask).sum())
+            stats.conj_drops += 1
+            state.T = state.T_host = state.mask = None
+            state.placement = "none"
+            state.served_by = ""
+            return
+        mask = np.array(state.mask, copy=True)
+        state_dev = localize_state(state.T)
+        T_host = (
+            state.T_host if state.T_host is not None else np.asarray(state.T)
+        )
+        if plan.ins_sources.any():
+            # base-row surgery: OR the new edges into the inserted-source
+            # rows (entries only grow — no eviction on the insert path)
+            idx = np.nonzero(plan.ins_sources)[0]
+            base = conj_init_matrix_rows(
+                self.graph, state.grammar, idx, pad_to=self.n
+            )
+            patch = T_host[:, idx, :] | base
+            jidx = jnp.asarray(idx.astype(np.int32))
+            state_dev = state_dev.at[:, jidx, :].set(jnp.asarray(patch))
+        seed = (plan.affected & mask) | plan.ins_sources
+        if seed.any():
+            d = self._decide(state, seed, seed, "conjunctive", "warm")
+            state.served_by = d.engine
+            state_dev, M, calls, _ = self._run_fixpoint(
+                state.tables, state_dev, seed,
+                semantics="conjunctive", decision=d,
+            )
+            mask |= M
+            stats.rows_repaired += int(np.asarray(M).sum())
+            stats.repair_iters += calls
+            stats.conj_repairs += 1
+        state.T = state_dev
+        state.T_host = np.asarray(state_dev)
+        state.mask = mask
+        state.placement = placement_of(state_dev)
+
     # ------------------------------------------------------------------ #
     def _check_graph(self) -> None:
         """Reconcile with the graph: logged edits repair row-wise; any edit
@@ -467,10 +559,15 @@ class QueryEngine:
             self.n = padded_size(g.n_nodes)
             self.clock.advance(g.version)
 
-    def _state_for(self, gkey: tuple, g: CNFGrammar) -> _GrammarState:
+    def _state_for(self, gkey: tuple, g) -> _GrammarState:
         state = self._states.get(gkey)
         if state is None:
-            state = _GrammarState(g, ProductionTables.from_grammar(g))
+            tables = (
+                ConjunctiveTables.from_grammar(g)
+                if isinstance(g, ConjunctiveGrammar)
+                else ProductionTables.from_grammar(g)
+            )
+            state = _GrammarState(g, tables)
             self._states[gkey] = state
         return state
 
@@ -479,8 +576,15 @@ class QueryEngine:
         validates every member; admission layers (repro.serve) call this
         per query at submit time so one bad request is rejected at its
         caller instead of failing the whole coalesced batch."""
-        if q.semantics not in ("relational", "single_path"):
+        if q.semantics not in ("relational", "single_path", "conjunctive"):
             raise ValueError(f"unknown semantics {q.semantics!r}")
+        conj_grammar = isinstance(q.grammar, ConjunctiveGrammar)
+        if conj_grammar != (q.semantics == "conjunctive"):
+            raise ValueError(
+                f"semantics {q.semantics!r} does not match grammar type "
+                f"{type(q.grammar).__name__} (ConjunctiveGrammar queries "
+                'must use semantics="conjunctive" and vice versa)'
+            )
         for m in q.sources or ():
             if not 0 <= m < self.graph.n_nodes:
                 raise ValueError(f"source {m} outside graph")
@@ -533,13 +637,14 @@ class QueryEngine:
         placement, and whether a mesh is available.
         """
         single_path = semantics == "single_path"
+        tables = state.tables
         f = PlanFeatures(
             n=self.n,
             seed_rows=int(seed.sum()),
             new_rows=int(new.sum()),
             density=len(self.graph.edges) / max(self.graph.n_nodes, 1),
-            n_prods=max(len(state.grammar.binary_prods), 1),
-            n_nonterms=len(state.grammar.nonterms),
+            n_prods=max(tables.n_prods, 1),
+            n_nonterms=tables.n_nonterms,
             semantics=semantics,
             repair=repair,
             cache=cache,
@@ -554,6 +659,7 @@ class QueryEngine:
                 self.n, self.graph.edges, self.config.tile
             ),
             tile=self.config.tile,
+            conjuncts=getattr(tables, "n_conjuncts", 0),
         )
         return self.planner.decide(
             f, pin=self._pin, min_capacity=self.row_capacity
@@ -604,14 +710,18 @@ class QueryEngine:
                     n_nonterms=tables.n_nonterms,
                     semantics=semantics,
                     repair=repair,
+                    conjuncts=getattr(tables, "n_conjuncts", 0),
                 ),
                 pin=self._pin or "dense",
                 min_capacity=self.row_capacity,
             )
         # the decision names the backend; PlanKey aliasing still applies
-        # (bitpacked single-path keys dense, opt repair keys bitpacked)
+        # (bitpacked single-path keys dense, opt repair keys bitpacked,
+        # conjunctive collapses onto its dense/bitpacked executables)
         if single_path:
             eng_name = sp_engine_name(decision.engine, repair=repair)
+        elif semantics == "conjunctive":
+            eng_name = conj_engine_name(decision.engine)
         elif repair:
             eng_name = repair_engine_name(decision.engine)
         else:
@@ -710,11 +820,12 @@ class QueryEngine:
                             tracer.clock(),
                             **fallback_event,
                         )
-                        eng_name = (
-                            sp_engine_name(fb, repair=False)
-                            if single_path
-                            else fb
-                        )
+                        if single_path:
+                            eng_name = sp_engine_name(fb, repair=False)
+                        elif semantics == "conjunctive":
+                            eng_name = conj_engine_name(fb)
+                        else:
+                            eng_name = fb
                         mesh_k = (
                             self._mesh_key if eng_name == "opt" else ()
                         )
@@ -766,9 +877,12 @@ class QueryEngine:
             return "hit", None, None
         status = "miss" if cur is None else "warm"
         if cur is None:
-            cur = init_matrix(self.graph, state.grammar, pad_to=self.n)
-            if single_path:
-                cur = base_lengths(cur)
+            if semantics == "conjunctive":
+                cur = conj_init_matrix(self.graph, state.grammar, pad_to=self.n)
+            else:
+                cur = init_matrix(self.graph, state.grammar, pad_to=self.n)
+                if single_path:
+                    cur = base_lengths(cur)
             mask = np.zeros(self.n, dtype=bool)
         mask = np.asarray(mask)
         with self.tracer.span(
@@ -798,10 +912,19 @@ class QueryEngine:
         return status, decision, fb
 
     def _serve_relational(
-        self, state: _GrammarState, batch: list[Query]
+        self,
+        state: _GrammarState,
+        batch: list[Query],
+        semantics: str = "relational",
     ) -> list[QueryResult]:
+        """Serve a bool-state batch: the relational fast path, and (with
+        ``semantics="conjunctive"``) the conjunctive one — identical
+        caching/slicing over the (N, n, n) bool state, different closure
+        executables underneath (plan.CONJ_ENGINES)."""
         t0 = time.perf_counter()
-        status, decision, fb = self._ensure_rows(state, batch)
+        status, decision, fb = self._ensure_rows(
+            state, batch, semantics=semantics
+        )
         latency = time.perf_counter() - t0
         nn = self.graph.n_nodes
         T = state.T_host
@@ -811,7 +934,7 @@ class QueryEngine:
             # the backend that materialized the served rows — on a cache
             # hit that is whoever ran last, not whoever would run next
             engine=state.served_by or self.engine,
-            semantics="relational",
+            semantics=semantics,
             batched_with=len(batch),
             active_rows=int(state.mask.sum()),
             epoch=self.clock.epoch,

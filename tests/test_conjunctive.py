@@ -1,12 +1,41 @@
-"""Conjunctive-grammar CFPQ (paper §7 future work): soundness + the paper's
-upper-approximation hypothesis."""
+"""Conjunctive-grammar CFPQ (paper §7 future work): soundness, the paper's
+upper-approximation hypothesis, and the engine-served workload.
+
+Layered like the subsystem itself:
+
+* standalone semantics — membership on {a^n b^n c^n}, soundness vs
+  string-level brute force, the over-approximation witness;
+* grammar validation — empty conjunct lists rejected, duplicates deduped;
+* the differential battery — engine-served results bit-equal to
+  ``core.conjunctive.evaluate`` across every registered backend (each
+  aliases onto the dense/bitpacked conjunctive executables), cold and
+  cache-warm, plus the former strict-xfail dispatch anchor now passing
+  as a real test;
+* the property battery — fixed-seed backstop (always) and a
+  hypothesis sweep (slow lane, skipped when hypothesis is absent):
+  sound vs brute force everywhere, exact on path-unique graphs
+  (chains, out-degree<=1 DAGs);
+* the delta contract — insert-only repair bit-identical vs a per-epoch
+  ``evaluate`` oracle, any delete a full state drop, stats recording
+  which path ran;
+* the serving loop — conjunctive queries coalesced through CFPQServer
+  with the ``+conjunctive`` planner-route label visible.
+"""
+import asyncio
 import re
 
 import numpy as np
 import pytest
 
-from repro.core.conjunctive import ConjunctiveGrammar, evaluate
+from repro.core.conjunctive import (
+    ConjunctiveGrammar,
+    ConjunctiveTables,
+    evaluate,
+)
+from repro.core.grammar import CNFGrammar, Production
 from repro.core.graph import Graph
+from repro.engine import CompiledClosureCache, EngineConfig, Query, QueryEngine
+from repro.engine.plan import MASKED_ENGINES, conj_engine_name
 
 # {a^n b^n c^n} — the canonical conjunctive (non-context-free) language:
 #   S -> (AB . c^+) & (a^+ . BC)   with AB = a^n b^n, BC = b^n c^n.
@@ -29,6 +58,30 @@ ABC = ConjunctiveGrammar.from_rules(
     ],
 )
 
+# an ordinary CNF grammar over the same terminals, for mixed-semantics
+# batches: S -> A B, A -> a, B -> b
+CNF_AB = CNFGrammar.from_productions(
+    [
+        Production("S", ("A", "B")),
+        Production("A", ("a",)),
+        Production("B", ("b",)),
+    ]
+)
+
+#: one compile cache for the whole module — conjunctive PlanKeys depend
+#: only on (tables, aliased engine, padded n, capacity), so every engine
+#: below shares the same two executables per grammar instead of
+#: recompiling per test
+PLANS = CompiledClosureCache()
+
+#: every registered backend plus the planner route; each backend serves
+#: conjunctive queries through its alias (plan.conj_engine_name)
+ENGINES = sorted(MASKED_ENGINES) + ["auto"]
+
+
+def _engine(graph: Graph, engine: str = "auto") -> QueryEngine:
+    return QueryEngine(graph, plans=PLANS, config=EngineConfig(engine=engine))
+
 
 def _chain(word: str) -> Graph:
     return Graph(len(word) + 1, [(i, ch, i + 1) for i, ch in enumerate(word)])
@@ -45,6 +98,33 @@ def _in_language(word: str) -> bool:
     return bool(m) and len(m.group(1)) == len(m.group(2)) == len(m.group(3))
 
 
+def _brute_pairs(graph: Graph, max_len: int = 9) -> set:
+    """String-level oracle: pairs (i, j) connected by a path (length <=
+    ``max_len``) whose label word is in {a^n b^n c^n} — the set the matrix
+    semantics must report as a superset (soundness), and exactly on
+    path-unique graphs."""
+    adj: dict[int, list] = {}
+    for i, x, j in graph.edges:
+        adj.setdefault(i, []).append((x, j))
+    out = set()
+    for start in range(graph.n_nodes):
+        stack = [(start, "")]
+        seen = set()
+        while stack:
+            node, word = stack.pop()
+            if len(word) > max_len or (node, word) in seen:
+                continue
+            seen.add((node, word))
+            if _in_language(word):
+                out.add((start, node))
+            for x, j in adj.get(node, ()):
+                stack.append((j, word + x))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Standalone semantics (pre-engine baseline, unchanged)
+# --------------------------------------------------------------------- #
 @pytest.mark.parametrize(
     "word",
     ["abc", "aabbcc", "aaabbbccc", "aabbc", "abbcc", "aabcc", "aabbbccc",
@@ -66,21 +146,7 @@ def test_soundness_on_random_graphs():
         ]
         graph = Graph(n, edges)
         reported = evaluate(graph, ABC, "S")
-        adj = {}
-        for i, x, j in edges:
-            adj.setdefault(i, []).append((x, j))
-        for start in range(n):
-            stack = [(start, "")]
-            seen = set()
-            while stack:
-                node, word = stack.pop()
-                if len(word) > 9 or (node, word) in seen:
-                    continue
-                seen.add((node, word))
-                if _in_language(word):
-                    assert (start, node) in reported, (start, node, word)
-                for x, j in adj.get(node, ()):
-                    stack.append((j, word + x))
+        assert _brute_pairs(graph) <= reported
 
 
 def test_upper_approximation_hypothesis():
@@ -99,27 +165,323 @@ def test_upper_approximation_hypothesis():
     assert (0, 2) not in evaluate(_chain("aa"), g, "S")
 
 
-@pytest.mark.xfail(
-    raises=Exception,
-    strict=True,
-    reason=(
-        "conjunctive closure is still a standalone function: QueryEngine's "
-        "grammar_key reads CNFGrammar fields (binary_prods/nonterms/"
-        "term_prods/nullable) that ConjunctiveGrammar lacks, so conjunctive "
-        "queries cannot be served through the engine dispatch yet.  This is "
-        "the red/green anchor for the ROADMAP 'Conjunctive-grammar "
-        "workloads' item — when the engine grows a conjunctive semantics, "
-        "this test starts passing (strict xfail flips to XPASS=failure, "
-        "forcing the marker's removal)."
-    ),
-)
-def test_engine_dispatch_serves_conjunctive_grammar():
-    """Pin today's unserved behavior: serving the a^n b^n c^n conjunctive
-    grammar through QueryEngine should match the standalone evaluator."""
-    from repro.engine import Query, QueryEngine
+# --------------------------------------------------------------------- #
+# Grammar validation (ConjunctiveGrammar.from_rules)
+# --------------------------------------------------------------------- #
+def test_from_rules_rejects_empty_conjunct_list():
+    with pytest.raises(ValueError, match="no conjuncts"):
+        ConjunctiveGrammar.from_rules({"a": ["A"]}, [("S", [])])
 
+
+def test_from_rules_dedupes_duplicate_conjuncts():
+    g = ConjunctiveGrammar.from_rules(
+        {"a": ["A"], "b": ["B"]},
+        [("S", [("A", "B"), ("A", "B"), ("B", "A")])],
+    )
+    ((_, pairs),) = g.conj_prods
+    assert len(pairs) == 2  # duplicate (A, B) dropped, order preserved
+    assert ConjunctiveTables.from_grammar(g).n_conjuncts == 2
+    # dedupe is semantics-preserving: AND is idempotent
+    dup = ConjunctiveGrammar(g.nonterms, g.term_prods,
+                             ((g.conj_prods[0][0], pairs + pairs[:1]),))
+    graph = Graph(3, [(0, "a", 1), (1, "b", 2), (0, "b", 1), (1, "a", 2)])
+    assert evaluate(graph, g, "S") == evaluate(graph, dup, "S")
+
+
+# --------------------------------------------------------------------- #
+# Differential battery: engine-served == standalone evaluate, every
+# backend, cold and cache-warm (the former strict-xfail anchor's suite)
+# --------------------------------------------------------------------- #
+def _diff_cases():
+    par = ConjunctiveGrammar.from_rules(
+        terminal_rules={"a": ["A"], "b": ["B"]},
+        conjunctive_rules=[("S", [("A", "A"), ("B", "B")])],
+    )
+    cases = [
+        ("chain", _chain("aabbcc"), ABC),
+        ("parallel_dag",
+         Graph(3, [(0, "a", 1), (1, "a", 2), (0, "b", 1), (1, "b", 2)]),
+         par),
+    ]
+    rng = np.random.default_rng(7)
+    for t in range(2):
+        n = 5
+        edges = [
+            (int(rng.integers(n)), "abc"[rng.integers(3)], int(rng.integers(n)))
+            for _ in range(10)
+        ]
+        cases.append((f"random{t}", Graph(n, edges), ABC))
+    return cases
+
+
+DIFF_CASES = _diff_cases()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_differential_vs_standalone(engine):
+    for name, graph, g in DIFF_CASES:
+        ref = evaluate(graph, g, "S")
+        eng = _engine(graph, engine)
+        cold = eng.query(Query(g, "S", semantics="conjunctive"))
+        assert cold.pairs == ref, (engine, name)
+        assert cold.stats.cache == "miss"
+        assert cold.stats.semantics == "conjunctive"
+        warm = eng.query(Query(g, "S", semantics="conjunctive"))
+        assert warm.pairs == ref, (engine, name)
+        assert warm.stats.cache == "hit"  # no closure ran the second time
+        # source-restricted slice out of the warm state
+        src = eng.query(Query(g, "S", sources=(0,), semantics="conjunctive"))
+        assert src.pairs == {(i, j) for (i, j) in ref if i == 0}
+
+
+def test_engine_dispatch_serves_conjunctive_grammar():
+    """The former strict-xfail red/green anchor for the ROADMAP
+    'Conjunctive-grammar workloads' item: serving the a^n b^n c^n
+    conjunctive grammar through QueryEngine matches the standalone
+    evaluator.  Now a real test."""
     graph = _chain("aabbcc")
-    eng = QueryEngine(graph)
-    result = eng.query(Query(ABC, "S", sources=(0,)))
+    eng = QueryEngine(graph)  # stock construction: engine="auto"
+    result = eng.query(Query(ABC, "S", sources=(0,), semantics="conjunctive"))
     want = {(i, j) for (i, j) in evaluate(graph, ABC, "S") if i == 0}
     assert result.pairs == want
+    assert result.stats.planner["label"].endswith("+conjunctive")
+    assert result.stats.planner["semantics"] == "conjunctive"
+
+
+@pytest.mark.parametrize("word", ["abc", "aabbcc", "aabbc", "acb"])
+def test_anbncn_golden_served_through_engine(word):
+    """The golden {a^n b^n c^n} case of the standalone battery, served
+    through engine="auto"."""
+    graph = _chain(word)
+    res = _engine(graph).query(
+        Query(ABC, "S", sources=(0,), semantics="conjunctive")
+    )
+    assert (((0, len(word)) in res.pairs) == _in_language(word)), word
+    assert res.pairs == {
+        (i, j) for (i, j) in evaluate(graph, ABC, "S") if i == 0
+    }
+
+
+def test_engine_aliasing_collapses_plan_keys():
+    """Backends without a conjunctive variant alias onto the two real
+    executables, so a shared plans cache compiles at most two conjunctive
+    executables per (grammar, n, capacity)."""
+    assert conj_engine_name("dense") == "dense"
+    assert conj_engine_name("frontier") == "dense"  # delta trick unsound
+    for packed in ("bitpacked", "opt", "blocksparse"):
+        assert conj_engine_name(packed) == "bitpacked"
+    plans = CompiledClosureCache()
+    graph = _chain("aabbcc")
+    for engine in sorted(MASKED_ENGINES):
+        eng = QueryEngine(graph, plans=plans,
+                          config=EngineConfig(engine=engine))
+        eng.query(Query(ABC, "S", semantics="conjunctive"))
+    assert plans.stats.compile_misses <= 2  # one dense + one bitpacked
+
+
+def test_mixed_relational_conjunctive_batch():
+    """One batch carrying both semantics splits into one closure-call
+    group each and both slices are oracle-correct."""
+    graph = _chain("aabbcc")
+    eng = _engine(graph)
+    r_conj, r_rel = eng.query_batch(
+        [
+            Query(ABC, "S", semantics="conjunctive"),
+            Query(CNF_AB, "S", semantics="relational"),
+        ]
+    )
+    assert r_conj.pairs == evaluate(graph, ABC, "S")
+    assert r_conj.stats.semantics == "conjunctive"
+    assert r_rel.stats.semantics == "relational"
+    assert r_rel.pairs == {(1, 3)}  # the one "ab" span of the chain
+    assert r_conj.stats.batch_total == 2
+    assert r_conj.stats.batch_groups == 2
+
+
+def test_semantics_grammar_mismatch_rejected():
+    eng = _engine(_chain("abc"))
+    with pytest.raises(ValueError, match="does not match"):
+        eng.query(Query(ABC, "S"))  # conjunctive grammar, relational default
+    with pytest.raises(ValueError, match="does not match"):
+        eng.query(Query(CNF_AB, "S", semantics="conjunctive"))
+    with pytest.raises(ValueError, match="unknown semantics"):
+        eng.query(Query(ABC, "S", semantics="intersective"))
+
+
+# --------------------------------------------------------------------- #
+# Property battery: fixed-seed backstop + hypothesis sweep (slow lane)
+# --------------------------------------------------------------------- #
+def _random_case(kind: str, rng: np.random.Generator) -> Graph:
+    if kind == "chain":
+        word = "".join(
+            "abc"[rng.integers(3)] for _ in range(int(rng.integers(1, 10)))
+        )
+        return _chain(word)
+    if kind == "dag":
+        # at most one outgoing edge per node, always forward: every
+        # (i, j) pair is realized by at most one path, so the matrix
+        # semantics is exact string membership
+        n = int(rng.integers(3, 8))
+        edges = []
+        for i in range(n - 1):
+            if rng.random() < 0.8:
+                j = int(rng.integers(i + 1, n))
+                edges.append((i, "abc"[rng.integers(3)], j))
+        return Graph(n, edges)
+    if kind == "community":
+        n = int(rng.integers(4, 7))
+        edges = [
+            (int(rng.integers(n)), "abc"[rng.integers(3)], int(rng.integers(n)))
+            for _ in range(int(rng.integers(4, 12)))
+        ]
+        return Graph(n, edges)
+    raise ValueError(kind)
+
+
+def _check_case(graph: Graph, engine: str = "auto"):
+    """The shared property body: engine == standalone (differential,
+    always) and standalone is sound vs string-level brute force."""
+    ref = evaluate(graph, ABC, "S")
+    got = _engine(graph, engine).query(
+        Query(ABC, "S", semantics="conjunctive")
+    ).pairs
+    assert got == ref
+    brute = _brute_pairs(graph)
+    assert brute <= got
+    return got, brute
+
+
+@pytest.mark.parametrize("kind", ["chain", "dag", "community"])
+def test_property_backstop_fixed_seeds(kind):
+    rng = np.random.default_rng(42)
+    for _ in range(4):
+        graph = _random_case(kind, rng)
+        got, brute = _check_case(graph)
+        if kind in ("chain", "dag"):
+            assert got == brute  # path-unique graphs: exact, not approximate
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: backstop covers it
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kind=st.sampled_from(["chain", "dag", "community"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_sweep_hypothesis(kind, seed):
+        graph = _random_case(kind, np.random.default_rng(seed))
+        got, brute = _check_case(graph)
+        if kind in ("chain", "dag"):
+            assert got == brute
+
+else:
+
+    @pytest.mark.slow
+    @pytest.mark.skip(
+        reason="hypothesis not installed; the fixed-seed backstop "
+        "(test_property_backstop_fixed_seeds) covers the property"
+    )
+    def test_property_sweep_hypothesis():
+        pass
+
+
+# --------------------------------------------------------------------- #
+# Delta contract: insert = warm re-seed repair, delete = full drop
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("engine", ["auto", "dense", "bitpacked"])
+def test_delta_interleaving_vs_oracle(engine):
+    word = "aaabbbccc"
+    full = [(i, ch, i + 1) for i, ch in enumerate(word)]
+    graph = Graph(len(word) + 1, full[:-2])  # last two edges missing
+    eng = _engine(graph, engine)
+    q = Query(ABC, "S", semantics="conjunctive")
+    assert eng.query(q).pairs == evaluate(eng.graph, ABC, "S")
+
+    # epoch 1: insert-only -> warm re-seed repair, state stays materialized
+    st1 = eng.apply_delta(insert=[full[-2]])
+    assert st1.conj_repairs == 1 and st1.conj_drops == 0
+    assert st1.rows_repaired > 0
+    r = eng.query(q)
+    assert r.stats.cache == "hit"  # repaired in place, no re-closure
+    assert r.pairs == evaluate(eng.graph, ABC, "S")
+
+    # epoch 2: the final insert completes a^3 b^3 c^3
+    st2 = eng.apply_delta(insert=[full[-1]])
+    assert st2.conj_repairs == 1 and st2.conj_drops == 0
+    r = eng.query(q)
+    assert r.stats.cache == "hit"
+    assert r.pairs == evaluate(eng.graph, ABC, "S") == {(0, len(word))}
+
+    # epoch 3: any delete -> full drop (AND is non-monotone under row
+    # eviction), next query re-closes from scratch
+    st3 = eng.apply_delta(delete=[full[3]])
+    assert st3.conj_drops == 1 and st3.conj_repairs == 0
+    assert st3.rows_evicted > 0
+    r = eng.query(q)
+    assert r.stats.cache == "miss"
+    assert r.pairs == evaluate(eng.graph, ABC, "S") == set()
+
+    # epoch 4: mixed insert+delete in one delta also drops
+    st4 = eng.apply_delta(insert=[full[3]], delete=[full[0]])
+    assert st4.conj_drops == 1 and st4.conj_repairs == 0
+    r = eng.query(q)
+    assert r.pairs == evaluate(eng.graph, ABC, "S")
+
+
+def test_delta_repair_matches_fresh_engine_bitwise():
+    """Insert-interleaved serving equals a cold engine at every epoch —
+    the repair path introduces no drift."""
+    word = "aabbcc"
+    full = [(i, ch, i + 1) for i, ch in enumerate(word)]
+    graph = Graph(len(word) + 1, full[:2])
+    eng = _engine(graph)
+    q = Query(ABC, "S", semantics="conjunctive")
+    eng.query(q)
+    for e in full[2:]:
+        eng.apply_delta(insert=[e])
+        repaired = eng.query(q).pairs
+        fresh = _engine(eng.graph).query(q).pairs
+        assert repaired == fresh == evaluate(eng.graph, ABC, "S")
+
+
+# --------------------------------------------------------------------- #
+# Serving loop: conjunctive queries coalesce through CFPQServer
+# --------------------------------------------------------------------- #
+def test_conjunctive_through_server():
+    from repro.serve import CFPQServer, ServeConfig
+
+    graph = _chain("aabbcc")
+    eng = _engine(graph)
+    ref = evaluate(graph, ABC, "S")
+
+    async def main():
+        async with CFPQServer(
+            eng, ServeConfig(max_batch=8, batch_window_s=0.005)
+        ) as srv:
+            outs = await asyncio.gather(
+                *[
+                    srv.submit(
+                        Query(ABC, "S", sources=(i,), semantics="conjunctive")
+                    )
+                    for i in range(3)
+                ]
+            )
+            return outs, srv.stats
+
+    outs, stats = asyncio.run(main())
+    for i, r in enumerate(outs):
+        assert r.pairs == {(a, b) for (a, b) in ref if a == i}
+    # the conjunctive planner route is visible at the serving layer
+    assert any(k.endswith("+conjunctive") for k in stats.planner_routes), (
+        stats.planner_routes
+    )

@@ -48,8 +48,10 @@ REQUIRED_ANCHORS: dict[str, list[str]] = {
         "pinning",
         "cache-semantics",
         "semantics",
+        "conjunctive",
     ],
     "ARCHITECTURE.md": ["quickstart", "the-stack"],
+    "DELTA.md": ["conjunctive-states"],
     "OBSERVABILITY.md": [
         "span-taxonomy",
         "iteration-events",
