@@ -8,6 +8,8 @@ Prints CSV blocks:
   [kernels]   Boolean-matmul kernel micro-bench
   [engine]    single-source query engine vs all-pairs (quick sizes; the
               full n ∈ {256, 1024, 4096} sweep is `-m benchmarks.bench_engine`)
+  [count]     counting closure vs relational + all-path extraction (quick
+              sizes; the full sweep is `-m benchmarks.bench_count`)
 
 Aggregation mode (CI bench-smoke lane; OBSERVABILITY.md):
 
@@ -65,7 +67,13 @@ def aggregate(out_path: str, inputs: list[str]) -> dict:
 
 
 def run_all() -> None:
-    from . import bench_cfpq, bench_engine, bench_kernels, bench_scaling
+    from . import (
+        bench_cfpq,
+        bench_count,
+        bench_engine,
+        bench_kernels,
+        bench_scaling,
+    )
 
     print("[table1-2] CFPQ ontology suite (paper Tables 1-2 analog)")
     print("\n".join(bench_cfpq.main()))
@@ -78,6 +86,9 @@ def run_all() -> None:
     print()
     print("[engine] single-source vs all-pairs (quick)")
     bench_engine.main(["--sizes", "256", "1024"])
+    print()
+    print("[count] counting vs relational + all-path extraction (quick)")
+    print("\n".join(bench_count.main()))
 
 
 def main(argv: list[str] | None = None) -> None:

@@ -361,8 +361,13 @@ def _blocksparse_fixpoint(
     B, G, N = state.tile, state.grid, state.n_nonterms
     unbounded = capacity >= state.n
     prods = list(zip(tables.a_idx, tables.b_idx, tables.c_idx))
+    # |V|^2 |N| divergence guard plus mask-expansion slack — the old
+    # n*N + n cap could truncate deep derivations before the fixpoint
+    # (see closure._iter_limit).
     limit = (
-        max_iters if max_iters is not None else state.n * N + state.n
+        max_iters
+        if max_iters is not None
+        else state.n * state.n * N + state.n
     )
     frontier: set[int] = set(range(state.n_slots))
     overflow = False

@@ -93,9 +93,13 @@ def _scatter_or_packed(
 
 
 def _iter_limit(T: jnp.ndarray, max_iters: int | None) -> int:
-    # Thm. 3 bounds iterations by |V|^2 |N|; the derivation-height argument
-    # (Lemma 4.1 + doubling) means n*N always suffices in this formulation.
-    return max_iters if max_iters is not None else T.shape[-1] * T.shape[0]
+    # Thm. 3 bounds iterations by |V|^2 |N| = n^2 N.  The loops all carry a
+    # `changed` flag, so this limit is only a divergence guard — but a
+    # tighter guess (the old n*N) can truncate *before* the fixpoint on
+    # deep-derivation inputs: one iteration may add as little as one entry,
+    # and there are n^2 N of them.
+    n = T.shape[-1]
+    return max_iters if max_iters is not None else n * n * T.shape[0]
 
 
 def dense_step(T: jnp.ndarray, tables: ProductionTables) -> jnp.ndarray:

@@ -215,7 +215,13 @@ def conjunctive_closure(
 ):
     """Fixpoint of  new[A] = AND_k (T[b_k] x T[c_k])  — upper approximation
     of the conjunctive relations (exact for ordinary CFG productions)."""
-    limit = max_iters if max_iters is not None else T.shape[-1] * T.shape[0]
+    # |V|^2 |N| divergence guard (closure._iter_limit) — n*N truncates on
+    # deep derivations where each iteration adds a single entry.
+    limit = (
+        max_iters
+        if max_iters is not None
+        else T.shape[-1] * T.shape[-1] * T.shape[0]
+    )
 
     def body(state):
         T, _, it = state

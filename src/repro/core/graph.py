@@ -63,6 +63,17 @@ class Graph:
     _edge_set_len: int = field(default=-1, repr=False, compare=False)
     _log_floor: int = field(default=0, repr=False, compare=False)
 
+    def __post_init__(self) -> None:
+        # Collapse duplicate (i, x, j) entries, keeping first-occurrence
+        # order.  Everything downstream treats ``edges`` as a set —
+        # ``n_edges`` feeds the planner's density feature, ``insert_edges``
+        # assumes no duplicates — so a duplicated input edge must not
+        # survive construction.
+        if len(set(self.edges)) != len(self.edges):
+            seen: set[tuple[int, str, int]] = set()
+            uniq = [e for e in self.edges if not (e in seen or seen.add(e))]
+            self.edges = uniq
+
     # ------------------------------------------------------------------ #
     @property
     def n_edges(self) -> int:
@@ -199,7 +210,8 @@ class Graph:
     def from_triples(
         cls, triples: list[tuple[str, str, str]], add_inverse: bool = True
     ) -> "Graph":
-        """Paper protocol: (o, p, s) -> edge (o,p,s) and (s, p_r, o)."""
+        """Paper protocol: (o, p, s) -> edge (o,p,s) and (s, p_r, o).
+        Repeated triples collapse to one edge (``__post_init__``)."""
         ids: dict[str, int] = {}
 
         def nid(name: str) -> int:
@@ -304,13 +316,25 @@ def worst_case_graph(k: int) -> Graph:
 def random_labeled_graph(
     n_nodes: int, n_edges: int, labels: list[str], seed: int = 0
 ) -> Graph:
+    """``n_edges`` *distinct* uniform edges (clamped to the number possible).
+
+    Draws are rejection-sampled against a seen-set so the same seed always
+    yields the same graph; without the dedupe, colliding draws used to
+    survive into ``Graph.edges`` and inflate ``n_edges`` (and every
+    density-derived planner/bench feature) past the true edge count.
+    """
     rng = np.random.default_rng(seed)
-    edges = []
-    for _ in range(n_edges):
+    target = min(n_edges, n_nodes * n_nodes * len(labels))
+    seen: set[tuple[int, str, int]] = set()
+    edges: list[tuple[int, str, int]] = []
+    while len(edges) < target:
         i = int(rng.integers(0, n_nodes))
         j = int(rng.integers(0, n_nodes))
         x = labels[int(rng.integers(0, len(labels)))]
-        edges.append((i, x, j))
+        e = (i, x, j)
+        if e not in seen:
+            seen.add(e)
+            edges.append(e)
     return Graph(n_nodes, edges)
 
 

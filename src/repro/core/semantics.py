@@ -92,7 +92,13 @@ def single_path_closure(
     a_idx = jnp.asarray(tables.a_idx, jnp.int32)
     b_idx = jnp.asarray(tables.b_idx, jnp.int32)
     c_idx = jnp.asarray(tables.c_idx, jnp.int32)
-    limit = max_iters if max_iters is not None else T.shape[-1] * T.shape[0]
+    # Thm. 3's |V|^2 |N| divergence guard — n*N is NOT enough (one entry
+    # can land per iteration); see closure._iter_limit.
+    limit = (
+        max_iters
+        if max_iters is not None
+        else T.shape[-1] * T.shape[-1] * T.shape[0]
+    )
     L0 = base_lengths(T)
 
     def cond(state):
@@ -621,20 +627,364 @@ def masked_bitpacked_conjunctive_closure(
 
 
 # ---------------------------------------------------------------------- #
+# Counting semantics: path-count matrices in a saturating semiring
+# (ENGINE.md#counting--all-paths).
+#
+# C[A, i, j] counts the *derivation trees* of (A, i ->* j) — on an
+# unambiguous grammar exactly the number of distinct paths i ->* j whose
+# label string derives from A.  The count planes live in uint32 with the
+# all-ones word as a sticky saturation sentinel: graphs with cycles have
+# infinitely many paths, and the saturating arithmetic below makes the
+# fixpoint land exactly on the sentinel instead of diverging (or silently
+# wrapping).  Every combine is add-then-clamp / multiply-then-clamp, so
+# SAT absorbs: once an entry saturates no later iteration, warm restart,
+# or repair can bring it back down.
+#
+# The fixpoint is the Jacobi iteration of the polynomial system
+#     C[A] = C0[A] + Σ_{A→BC} C[B] · C[C]
+# (a tree is a base edge or a root production over two subtrees), iterated
+# from below: every intermediate state under-counts, iterates increase
+# monotonically, and height-h trees are counted after h iterations — so
+# the masked machinery's bucket-growth warm restarts and the engine's
+# monotone-state contract carry over verbatim.  Unlike the idempotent
+# Boolean/min-plus algebras the combine is NOT absorptive (C | new would
+# double-count), hence the recompute-from-base shape: the base tensor
+# rides along as an explicit operand.
+#
+# Divergent entries cannot be left to the arithmetic alone: a single-label
+# self-loop grows its count by +1 per iteration, so "iterate until the
+# clamp kicks in" would take 2^32 iterations (and any iteration guard
+# would truncate it into a silently wrong finite count).  Instead the
+# closures run three phases:
+#   A. the ordinary *Boolean* fixpoint on the support (derivability);
+#   B. a *divergence* greatest-fixpoint: an entry has infinitely many
+#      derivations iff some derivation of it passes through a dependency
+#      cycle (pumping: a config (B,k,l) properly containing itself).
+#      D = the largest X ⊆ support with  X[A,i,j] ⇒ ∃ A→BC, k with
+#      (X[B,i,k] ∧ T[C,k,j]) ∨ (T[B,i,k] ∧ X[C,k,j]) — computed by
+#      peeling entries with no X-touching split until stable;
+#   C. the saturating Jacobi above, seeded with D stamped to SAT — the
+#      finite entries converge at their (finite) derivation heights, and
+#      SAT absorbs through every product that touches it.
+# Phase B is sound under partial states too: a cycle found inside an
+# under-approximated support is a cycle of the true support, so warm
+# restarts never see a premature sentinel.
+# ---------------------------------------------------------------------- #
+
+#: saturation sentinel: a count of 0xFFFFFFFF means ">= 2^32 - 1 paths".
+SAT_COUNT = np.uint32(0xFFFFFFFF)
+
+_SAT = jnp.uint32(0xFFFFFFFF)
+
+
+def _sat_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Saturating uint32 add: clamps to the sentinel instead of wrapping.
+    Unsigned overflow wrapped iff the wrapped sum is below an operand."""
+    s = a + b
+    return jnp.where(s < a, _SAT, s)
+
+
+def _sat_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Saturating uint32 multiply: a*b overflows iff b > 0 and
+    a > SAT // b.  SAT is absorbing for any b >= 2, and SAT * 1 = SAT,
+    so stickiness needs no special casing."""
+    hi = _SAT // jnp.maximum(b, jnp.uint32(1))
+    return jnp.where((b > jnp.uint32(0)) & (a > hi), _SAT, a * b)
+
+
+def _count_mm(lhs: jnp.ndarray, rhs: jnp.ndarray, chunk: int = 64):
+    """Batched saturating count matmul:
+    out[p,i,j] = sat-Σ_k  sat(lhs[p,i,k] * rhs[p,k,j]).
+
+    Mirrors :func:`_minplus`: tiled over the contraction axis k with a
+    fori_loop so peak memory is (P, rows, chunk, cols), rectangular
+    operands welcome.  The per-chunk reduction is a trace-time pairwise
+    tree of saturating adds — a wrapping ``jnp.sum`` could alias a huge
+    true count back into the small range, which the battery's golden
+    saturation case would catch."""
+    P, rows, K = lhs.shape
+    cols = rhs.shape[-1]
+    chunk = min(chunk, K)
+    n_chunks = -(-K // chunk)
+    pad = n_chunks * chunk - K
+    if pad:
+        lhs = jnp.pad(lhs, ((0, 0), (0, 0), (0, pad)))
+        rhs = jnp.pad(rhs, ((0, 0), (0, pad), (0, 0)))
+
+    def body(c, acc):
+        lk = jax.lax.dynamic_slice_in_dim(lhs, c * chunk, chunk, axis=2)
+        rk = jax.lax.dynamic_slice_in_dim(rhs, c * chunk, chunk, axis=1)
+        part = _sat_mul(lk[:, :, :, None], rk[:, None, :, :])
+        width = part.shape[2]
+        while width > 1:  # static: unrolled at trace time
+            half = width // 2
+            merged = _sat_add(
+                part[:, :, :half, :], part[:, :, half : 2 * half, :]
+            )
+            if width % 2:
+                merged = jnp.concatenate(
+                    [merged, part[:, :, 2 * half :, :]], axis=2
+                )
+            part = merged
+            width = part.shape[2]
+        return _sat_add(acc, part[:, :, 0, :])
+
+    init = jnp.zeros((P, rows, cols), jnp.uint32)
+    return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+def _scatter_sat_add(prod: jnp.ndarray, tables: ProductionTables):
+    """Per-LHS saturating sum of production products — the counting analog
+    of closure.py's scatter-OR trees, built at trace time from the static
+    tables (``.at[a_idx].add`` would wrap, not clamp)."""
+    groups = tables.groups()
+    zero = jnp.zeros(prod.shape[1:], jnp.uint32)
+    planes = []
+    for a in range(tables.n_nonterms):
+        ps = groups.get(a, ())
+        if not ps:
+            planes.append(zero)
+            continue
+        t = prod[ps[0]]
+        for p in ps[1:]:
+            t = _sat_add(t, prod[p])
+        planes.append(t)
+    return jnp.stack(planes)
+
+
+def count_base(
+    graph: Graph, g: CNFGrammar, pad_to: int | None = None
+) -> jnp.ndarray:
+    """Base count matrix: C0[A,i,j] = #{edges (i,x,j) with A -> x}.
+
+    NOT ``init_matrix(...).astype(uint32)`` — two parallel edges with
+    different labels that both derive from A are two distinct length-1
+    paths, which the Boolean base collapses to one bit."""
+    n = pad_to if pad_to is not None else padded_size(graph.n_nodes)
+    if n < graph.n_nodes:
+        raise ValueError("pad_to smaller than the graph")
+    C = np.zeros((g.n_nonterms, n, n), dtype=np.uint32)
+    for i, x, j in graph.edges:
+        for a in g.term_prods.get(x, ()):
+            C[a, i, j] += 1
+    return jnp.asarray(C)
+
+
+def count_base_rows(
+    graph: Graph, g: CNFGrammar, rows, pad_to: int | None = None
+) -> np.ndarray:
+    """The ``rows`` slices of :func:`count_base`, shape
+    ``(|N|, len(rows), n)`` — O(|rows|·n) memory, for delta recounts."""
+    n = pad_to if pad_to is not None else padded_size(graph.n_nodes)
+    pos = {int(r): k for k, r in enumerate(rows)}
+    out = np.zeros((g.n_nonterms, len(pos), n), dtype=np.uint32)
+    for i, x, j in graph.edges:
+        k = pos.get(i)
+        if k is not None:
+            for a in g.term_prods.get(x, ()):
+                out[a, k, j] += 1
+    return out
+
+
+def _scatter_or(prod: jnp.ndarray, tables: ProductionTables):
+    """Per-LHS OR of production products, trace-time fold (the Boolean
+    analog of :func:`_scatter_sat_add`, for the divergence phase)."""
+    groups = tables.groups()
+    zero = jnp.zeros(prod.shape[1:], jnp.bool_)
+    planes = []
+    for a in range(tables.n_nonterms):
+        ps = groups.get(a, ())
+        if not ps:
+            planes.append(zero)
+            continue
+        t = prod[ps[0]]
+        for p in ps[1:]:
+            t = t | prod[p]
+        planes.append(t)
+    return jnp.stack(planes)
+
+
+@partial(jax.jit, static_argnames=("tables", "max_iters"))
+def count_closure(
+    C0: jnp.ndarray, tables: ProductionTables, max_iters: int | None = None
+) -> jnp.ndarray:
+    """All-pairs counting closure: the least fixpoint of
+    ``C = C0 + Σ_{A→BC} C[B]·C[C]`` in the saturating semiring.
+
+    ``C0`` is the :func:`count_base` tensor.  Runs the three phases of
+    the section comment: Boolean support, divergence gfp, saturating
+    Jacobi.  Finite entries converge at their derivation heights;
+    entries with unboundedly many paths land exactly on the
+    :data:`SAT_COUNT` sentinel."""
+    if tables.n_prods == 0:
+        return C0
+    from .closure import _bool_matmul, dense_closure
+
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = (
+        max_iters
+        if max_iters is not None
+        else C0.shape[-1] * C0.shape[-1] * C0.shape[0]
+    )
+
+    T = dense_closure(C0 > 0, tables, max_iters=max_iters)  # phase A
+
+    def g_cond(state):
+        _, changed, it = state
+        return changed & (it < limit)
+
+    def g_body(state):
+        X, _, it = state
+        contrib = _bool_matmul(X[b_idx], T[c_idx]) | _bool_matmul(
+            T[b_idx], X[c_idx]
+        )
+        X_next = X & _scatter_or(contrib, tables)
+        return X_next, jnp.any(X_next != X), it + 1
+
+    X, _, _ = jax.lax.while_loop(g_cond, g_body, (T, jnp.bool_(True), 0))
+
+    C_seed = jnp.where(X, _SAT, C0)  # phase C: divergent entries pinned
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < limit)
+
+    def body(state):
+        C, _, it = state
+        prod = _count_mm(C[b_idx], C[c_idx])  # (P, n, n)
+        C_next = _sat_add(C_seed, _scatter_sat_add(prod, tables))
+        # monotone guard for mixed/warm inputs (a cold run never dips)
+        C_next = jnp.maximum(C_next, C)
+        return C_next, jnp.any(C_next != C), it + 1
+
+    C, _, _ = jax.lax.while_loop(cond, body, (C_seed, jnp.bool_(True), 0))
+    return C
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tables", "row_capacity", "max_iters", "iter_hook"),
+)
+def masked_count_closure(
+    C: jnp.ndarray,
+    base: jnp.ndarray,
+    tables: ProductionTables,
+    src_mask: jnp.ndarray,
+    row_capacity: int = 128,
+    max_iters: int | None = None,
+    iter_hook=None,
+):
+    """Source-restricted counting closure — the engine workload for
+    ``semantics="count"`` (dense only; every backend pin aliases here via
+    ``plan.count_engine_name`` — u32 saturating planes have no packed,
+    frontier, or block-sparse layout).
+
+    ``C`` is the (N, n, n) uint32 state (``base`` itself when cold, or a
+    cached state for a warm restart), ``base`` the current
+    :func:`count_base` tensor — the Jacobi recompute needs it as an
+    explicit operand, unlike the idempotent algebras.  Returns
+    ``(C, M, overflowed)`` under the standard masked contract: rows of
+    ``C`` selected by ``M`` equal the all-pairs :func:`count_closure`
+    rows iff ``overflowed`` is False.  Masked-row exactness carries over
+    from the Boolean argument with sums in place of ORs: every k
+    contributing to an active row i is reachable from i, joins ``M``
+    through the phase-A support closure, and its row converges by
+    induction on derivation height.  The scatter combine is ``max`` —
+    iterates increase monotonically from below, so max never loses a
+    count, and it keeps the padding slots of the compacted index gather
+    write-free."""
+    from .closure import (
+        _active_rows,
+        _bool_matmul,
+        _iter_event,
+        _masked_limit,
+        masked_closure,
+    )
+
+    n = C.shape[-1]
+    if tables.n_prods == 0:
+        return C, jnp.ones((n,), jnp.bool_), jnp.bool_(False)
+    R = min(row_capacity, n)
+    b_idx = jnp.asarray(tables.b_idx, jnp.int32)
+    c_idx = jnp.asarray(tables.c_idx, jnp.int32)
+    limit = _masked_limit(C, max_iters)
+    zero = jnp.uint32(0)
+
+    # Phase A: Boolean support closure — settles M (and overflow) before
+    # any counting happens, so phases B/C run on a fixed active-row set.
+    T_sup, M, overflow = masked_closure(
+        (C > 0) | (base > 0), tables, src_mask,
+        row_capacity=row_capacity, max_iters=max_iters,
+    )
+    idx, valid = _active_rows(M, R)
+    T_rows = T_sup[:, idx, :] & valid[None, :, None]  # (N, R, n)
+    lhs_T = T_rows[b_idx][:, :, idx] & valid[None, None, :]  # (P, R, R)
+
+    # Phase B: divergence gfp on the compacted rows.  A cycle found in a
+    # partial (overflowed) support is a cycle of the true support, so the
+    # sentinel is never stamped prematurely.
+    def g_cond(state):
+        _, changed, it = state
+        return changed & (it < limit)
+
+    def g_body(state):
+        X_rows, _, it = state
+        lhs_X = X_rows[b_idx][:, :, idx] & valid[None, None, :]
+        contrib = _bool_matmul(lhs_X, T_rows[c_idx]) | _bool_matmul(
+            lhs_T, X_rows[c_idx]
+        )
+        X_next = X_rows & _scatter_or(contrib, tables)
+        return X_next, jnp.any(X_next != X_rows), it + 1
+
+    X_rows, _, _ = jax.lax.while_loop(
+        g_cond, g_body, (T_rows, jnp.bool_(True), 0)
+    )
+    # stamp divergent entries (active rows only; invalid lanes write 0 —
+    # a no-op under the scatter-max)
+    C = C.at[:, idx, :].max(jnp.where(X_rows, _SAT, zero))
+
+    # Phase C: saturating Jacobi over the settled active set.
+    def cond(state):
+        _, _, grew, overflow, it = state
+        return grew & ~overflow & (it < limit)
+
+    def body(state):
+        C, M, _, _, it = state
+        idx, valid = _active_rows(M, R)
+        rows = jnp.where(valid[None, :, None], C[:, idx, :], zero)  # (N,R,n)
+        # compact the contraction axis too: only rows in M can contribute
+        lhs = jnp.where(
+            valid[None, None, :], rows[b_idx][:, :, idx], zero
+        )  # (P, R, R)
+        prod = _count_mm(lhs, rows[c_idx])  # (P, R, n)
+        base_r = jnp.where(valid[None, :, None], base[:, idx, :], zero)
+        new_r = _sat_add(base_r, _scatter_sat_add(prod, tables))
+        new_r = jnp.where(valid[None, :, None], new_r, zero)
+        C_next = C.at[:, idx, :].max(new_r)
+        M_next = M | jnp.any(rows != zero, axis=(0, 1))
+        overflow = jnp.sum(M_next, dtype=jnp.int32) > R
+        changed = C_next != C
+        grew = jnp.any(changed) | jnp.any(M_next & ~M)
+        _iter_event(iter_hook, it, M_next, changed, overflow)
+        return C_next, M_next, grew, overflow, it + 1
+
+    state = (C, M, ~overflow, overflow, 0)
+    C, M, _, overflow, _ = jax.lax.while_loop(cond, body, state)
+    return C, M, overflow
+
+
+# ---------------------------------------------------------------------- #
 # Witness-path reconstruction ("simple search" of Theorem 5), host-side.
 # ---------------------------------------------------------------------- #
 
 
-class PathExtractor:
-    """Batched witness reconstruction over one (graph, grammar) pair.
-
-    Hoists the graph/grammar index structures (edge membership, productions
-    grouped by LHS) out of the per-pair extraction loop, so serving a
-    result with thousands of witnesses builds them once instead of once
-    per pair.  Extraction itself runs on an explicit stack (not Python
-    recursion) — witness lengths grow with the graph and would otherwise
-    hit the interpreter recursion limit.
-    """
+class _DerivationBase:
+    """Shared host-side index over one (graph, grammar) pair: edge
+    membership by endpoint pair, binary productions grouped by LHS,
+    terminal productions grouped by LHS.  Built once per batch by both
+    witness reconstruction (:class:`PathExtractor`) and bounded all-path
+    enumeration (:class:`DerivationIndex`)."""
 
     def __init__(self, graph: Graph, g: CNFGrammar) -> None:
         self.g = g
@@ -648,6 +998,18 @@ class PathExtractor:
         for x, lhss in g.term_prods.items():
             for a in lhss:
                 self._term_by_lhs.setdefault(a, []).append(x)
+
+
+class PathExtractor(_DerivationBase):
+    """Batched witness reconstruction over one (graph, grammar) pair.
+
+    Hoists the graph/grammar index structures (:class:`_DerivationBase`)
+    out of the per-pair extraction loop, so serving a result with
+    thousands of witnesses builds them once instead of once per pair.
+    Extraction itself runs on an explicit stack (not Python recursion) —
+    witness lengths grow with the graph and would otherwise hit the
+    interpreter recursion limit.
+    """
 
     def extract(
         self, L: np.ndarray, nonterm: str, i: int, j: int
@@ -703,6 +1065,99 @@ def extract_path(
     """One-shot wrapper around :class:`PathExtractor` (rebuilds the index
     structures per call — batch extraction should use the class)."""
     return PathExtractor(graph, g).extract(L, nonterm, i, j)
+
+
+class DerivationIndex(_DerivationBase):
+    """Packed derivation index: bounded all-path enumeration over one
+    (closure, graph, grammar) triple.
+
+    Generalizes :class:`PathExtractor`'s witness reconstruction from "one
+    path whose length matches the recorded annotation" to "the first k
+    distinct paths within a length bound": the same shared grammar/edge
+    index (:class:`_DerivationBase`), plus the Boolean closure held
+    bit-packed by rows *and* by columns, so the split candidates of a
+    production ``A -> B C`` at ``(i, j)`` — the nodes t with ``T[B,i,t]``
+    and ``T[C,t,j]`` — come from one bitwise AND over packed words
+    instead of an O(n) scan per probe.  The closure also prunes the
+    enumeration: a (nonterm, s, d) branch with no closure entry derives
+    nothing at any length and is cut immediately.
+
+    ``T`` must be exact on every row reachable from the queried sources
+    (the full all-pairs closure, or a masked state whose mask covers the
+    source — mask rows are exact and paths only traverse reachable rows).
+    """
+
+    def __init__(self, T: np.ndarray, graph: Graph, g: CNFGrammar) -> None:
+        super().__init__(graph, g)
+        self._T = np.asarray(T).astype(bool)
+        self.n = self._T.shape[-1]
+        # bit t of _rows[A, i] is T[A, i, t]; _cols is the transpose view
+        # packed the same way, so splits() ANDs two contiguous words.
+        self._rows = np.packbits(self._T, axis=-1)
+        self._cols = np.packbits(self._T.transpose(0, 2, 1), axis=-1)
+
+    def splits(self, b: int, i: int, c: int, j: int) -> np.ndarray:
+        """Nodes t with T[b, i, t] and T[c, t, j], via packed AND."""
+        words = self._rows[b, i] & self._cols[c, j]
+        return np.nonzero(np.unpackbits(words, count=self.n))[0]
+
+    def _enum(self, a: int, s: int, d: int, budget: int):
+        """Yield edge-list paths ``s ->* d`` derivable from nonterminal
+        ``a`` with 1 <= length <= budget, possibly with repeats (the same
+        path can arise through different derivations — the public API
+        dedupes).  Terminates because both halves of every split get a
+        strictly smaller budget; recursion depth is O(budget)."""
+        if budget < 1 or not self._T[a, s, d]:
+            return
+        for x in self._term_by_lhs.get(a, ()):
+            if x in self._edges.get((s, d), ()):
+                yield [(s, x, d)]
+        if budget < 2:
+            return
+        for b, c in self._by_lhs.get(a, ()):
+            for t in self.splits(b, s, c, d):
+                t = int(t)
+                for left in self._enum(b, s, t, budget - 1):
+                    for right in self._enum(c, t, d, budget - len(left)):
+                        yield left + right
+
+    def extract_paths(
+        self, nonterm: str, i: int, j: int, k: int, max_len: int
+    ) -> list[list[tuple[int, str, int]]]:
+        """Up to ``k`` distinct paths ``i ->* j`` derivable from
+        ``nonterm``, each of length <= ``max_len``, shortest-budget-first
+        within the enumeration order.  A nullable start contributes the
+        empty path at ``i == j``, matching the relational pair set."""
+        a0 = self.g.index_of(nonterm)
+        out: list[list[tuple[int, str, int]]] = []
+        seen: set[tuple] = set()
+        if i == j and nonterm in self.g.nullable and k > 0:
+            out.append([])
+            seen.add(())
+        for path in self._enum(a0, i, j, max_len):
+            key = tuple(path)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(path)
+            if len(out) >= k:
+                break
+        return out
+
+
+def extract_paths(
+    T: np.ndarray,
+    graph: Graph,
+    g: CNFGrammar,
+    nonterm: str,
+    i: int,
+    j: int,
+    k: int = 10,
+    max_len: int = 16,
+) -> list[list[tuple[int, str, int]]]:
+    """One-shot bounded all-path enumeration (rebuilds the packed index
+    per call — batch extraction should use :class:`DerivationIndex`)."""
+    return DerivationIndex(T, graph, g).extract_paths(nonterm, i, j, k, max_len)
 
 
 # ---------------------------------------------------------------------- #
@@ -767,6 +1222,27 @@ def evaluate_relational(
     if start in g.nullable:
         rel |= {(m, m) for m in range(graph.n_nodes)}
     return rel
+
+
+def evaluate_count(
+    graph: Graph, g: CNFGrammar, start: str
+) -> dict[tuple[int, int], int]:
+    """Counting CFPQ: (i, j) -> number of derivations of ``start`` paths
+    i ->* j (== distinct paths on an unambiguous grammar), saturating at
+    :data:`SAT_COUNT`.  A nullable start contributes the empty path: one
+    extra path per (m, m), saturating-added like any other."""
+    tables = ProductionTables.from_grammar(g)
+    C = np.asarray(count_closure(count_base(graph, g), tables))
+    a0 = g.index_of(start)
+    n = graph.n_nodes
+    out: dict[tuple[int, int], int] = {}
+    for i, j in zip(*np.nonzero(C[a0, :n, :n])):
+        out[(int(i), int(j))] = int(C[a0, i, j])
+    if start in g.nullable:
+        for m in range(n):
+            c = out.get((m, m), 0)
+            out[(m, m)] = c + 1 if c < int(SAT_COUNT) else int(SAT_COUNT)
+    return out
 
 
 def evaluate_single_path(

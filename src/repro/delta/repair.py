@@ -115,7 +115,12 @@ class DeltaStats:
     record which side of the conjunctive delta contract ran per cached
     conjunctive state: insert-only warm re-seed repair, or the full state
     drop that any deletion forces (AND is non-monotone under row
-    eviction; DELTA.md#conjunctive-states).
+    eviction; DELTA.md#conjunctive-states).  ``count_repairs`` /
+    ``count_drops`` are the analogous pair for cached counting states:
+    insert-only deltas recount affected rows from the new base (the
+    Boolean warm re-seed would double-count — a count row is a sum, not
+    a set, so folding new base edges into it is unsound), any deletion
+    drops the state (DELTA.md#count-states).
     """
 
     rows_repaired: int = 0
@@ -123,6 +128,8 @@ class DeltaStats:
     repair_iters: int = 0
     conj_repairs: int = 0
     conj_drops: int = 0
+    count_repairs: int = 0
+    count_drops: int = 0
 
     def merge(self, other: "DeltaStats") -> None:
         self.rows_repaired += other.rows_repaired
@@ -130,6 +137,8 @@ class DeltaStats:
         self.repair_iters += other.repair_iters
         self.conj_repairs += other.conj_repairs
         self.conj_drops += other.conj_drops
+        self.count_repairs += other.count_repairs
+        self.count_drops += other.count_drops
 
     def as_dict(self) -> dict:
         return {
@@ -138,6 +147,8 @@ class DeltaStats:
             "repair_iters": self.repair_iters,
             "conj_repairs": self.conj_repairs,
             "conj_drops": self.conj_drops,
+            "count_repairs": self.count_repairs,
+            "count_drops": self.count_drops,
         }
 
 

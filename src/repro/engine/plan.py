@@ -90,6 +90,24 @@ CONJ_ENGINES = {
     "bitpacked": _semantics.masked_bitpacked_conjunctive_closure,
 }
 
+#: masked counting closure (``semantics="count"``).  One real variant: the
+#: u32 saturating planes have no packed word layout, no frontier delta
+#: trick (the Jacobi recompute always re-reads full rows), and no sharded
+#: or block-tiled treatment — :func:`count_engine_name` aliases every
+#: backend onto the dense executable, the same collapse the conjunctive
+#: family uses.
+COUNT_ENGINES = {
+    "dense": _semantics.masked_count_closure,
+}
+
+
+def count_engine_name(engine: str) -> str:
+    """Backend name to key counting plans under: always ``dense`` — there
+    is exactly one masked counting executable (see :data:`COUNT_ENGINES`),
+    so every backend's count PlanKeys collapse onto it and cache-hit
+    counters reflect the real reuse."""
+    return "dense"
+
 
 def conj_engine_name(engine: str) -> str:
     """Backend name to key conjunctive plans under: packed backends
@@ -168,8 +186,12 @@ class PlanKey:
     iteration — their ``tables`` is a
     :class:`~repro.core.conjunctive.ConjunctiveTables`, whose value hash
     covers the conjunct structure, so two conjunctive grammars share an
-    executable exactly when their index form coincides.  Signatures are
-    otherwise identical.
+    executable exactly when their index form coincides.  ``"count"``
+    executables run on the (N, n, n) uint32 path-count matrix in the
+    saturating semiring and take the base tensor as an extra operand —
+    signature ``(C, base, src_mask) -> (C, mask, overflow)`` — because
+    the Jacobi recompute re-adds the base each iteration instead of
+    folding it into the state.  Signatures are otherwise identical.
     ``mesh`` is the mesh identity for sharded (``opt``) executables — the
     ``(axis_name, size)`` tuple of the device mesh the plan partitions
     over, ``()`` for single-device plans.  Two engines sharing a plans
@@ -351,6 +373,18 @@ class CompiledClosureCache:
             fn = CONJ_ENGINES[key.engine]
             kw = {"row_capacity": key.row_capacity, **self._hook_kw(key)}
             return fn.lower(T, key.tables, m, **kw).compile()
+        if key.semantics == "count":
+            # One dense executable serves every backend (count_engine_name);
+            # count plans never carry repair/mesh — insert repair re-seeds
+            # affected rows and re-enters this same closure
+            # (delta/DELTA.md#count-states), and there is no sharded
+            # counting variant.
+            C = jax.ShapeDtypeStruct(
+                (key.tables.n_nonterms, key.n, key.n), jnp.uint32
+            )
+            fn = COUNT_ENGINES[key.engine]
+            kw = {"row_capacity": key.row_capacity, **self._hook_kw(key)}
+            return fn.lower(C, C, key.tables, m, **kw).compile()
         T = jax.ShapeDtypeStruct(
             (key.tables.n_nonterms, key.n, key.n), jnp.bool_
         )

@@ -219,10 +219,13 @@ class PlanDecision:
         tag = f"{self.engine}:{self.mode}"
         if self.sharded:
             tag += "+mesh"
-        # only the conjunctive route is labeled: relational/single_path
-        # keep their pre-existing labels (dashboards key on them)
+        # only the conjunctive and count routes are labeled:
+        # relational/single_path keep their pre-existing labels
+        # (dashboards key on them)
         if self.semantics == "conjunctive":
             tag += "+conjunctive"
+        elif self.semantics == "count":
+            tag += "+count"
         return tag
 
     def to_dict(self) -> dict:
@@ -296,6 +299,11 @@ class Planner:
 
     # ------------------------------------------------------------------ #
     def _candidate_backends(self, f: PlanFeatures) -> list[str]:
+        if f.semantics == "count":
+            # one masked counting executable exists (plan.COUNT_ENGINES):
+            # u32 saturating planes have no packed/frontier/sharded variant,
+            # so every backend aliases onto the dense count closure
+            return ["dense"]
         if f.semantics == "conjunctive":
             # the two real conjunctive executables (plan.CONJ_ENGINES);
             # frontier is unsound under AND, opt/blocksparse have no
@@ -368,6 +376,13 @@ class Planner:
                 if f.semantics == "conjunctive" and f.conjuncts
                 else f.n_prods
             )
+            if f.semantics == "count":
+                # count-plane work multiplier: the saturating contraction
+                # runs three closure phases on u32 planes (Boolean support,
+                # divergence gfp, Jacobi) instead of one Boolean pass, and
+                # the u32 multiply-accumulate has no MXU bool shortcut —
+                # price it at 4x the relational contraction
+                n_units *= 4
             cost = beta + alpha * _work_munits(
                 self._family(backend, f), n_units, cap, f.n, devices
             )

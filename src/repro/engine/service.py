@@ -58,7 +58,14 @@ from repro.core.matrices import (
     init_matrix_rows,
     padded_size,
 )
-from repro.core.semantics import PathExtractor, base_lengths
+from repro.core.semantics import (
+    DerivationIndex,
+    PathExtractor,
+    SAT_COUNT,
+    base_lengths,
+    count_base,
+    count_base_rows,
+)
 from repro.delta.repair import (
     DeltaStats,
     localize_state,
@@ -77,6 +84,7 @@ from .plan import (
     PlanKey,
     bucket_for,
     conj_engine_name,
+    count_engine_name,
     mesh_key_of,
     repair_engine_name,
     sp_engine_name,
@@ -113,9 +121,13 @@ class Query:
     ``sources=None`` asks for the all-pairs relation; otherwise only pairs
     whose source is listed are computed/returned.  ``semantics`` is
     ``"relational"`` (pair set), ``"single_path"`` (one witness path per
-    pair, paper Section 5), or ``"conjunctive"`` (upper-approximate
+    pair, paper Section 5), ``"conjunctive"`` (upper-approximate
     intersection relations, paper Section 7 — requires a
-    :class:`~repro.core.conjunctive.ConjunctiveGrammar`).
+    :class:`~repro.core.conjunctive.ConjunctiveGrammar`), or ``"count"``
+    (per-pair path counts in the saturating semiring,
+    ``repro.core.semantics.SAT_COUNT`` meaning "at least 2^32 - 1 paths"
+    — requires an ordinary CNF grammar; results carry
+    ``QueryResult.counts``).
     """
 
     grammar: CNFGrammar | ConjunctiveGrammar
@@ -130,6 +142,9 @@ class QueryResult:
     pairs: set[tuple[int, int]]
     paths: dict[tuple[int, int], list[tuple[int, str, int]]] | None
     stats: QueryStats
+    #: per-pair path counts (``semantics="count"`` only): values are
+    #: exact below ``SAT_COUNT``; the sentinel means "at least that many"
+    counts: dict[tuple[int, int], int] | None = None
 
 
 @dataclass
@@ -145,7 +160,18 @@ class _GrammarState:
     sp_L: jnp.ndarray | None = None
     sp_L_host: np.ndarray | None = None
     sp_mask: np.ndarray | None = None
+    # counting state (semantics="count"), cached beside the other two: the
+    # (N, n, n) uint32 path-count matrix in the saturating semiring, its
+    # own row mask, and the base tensor the Jacobi recompute re-adds each
+    # iteration (kept on device so warm closures don't rebuild it).
+    cnt_C: jnp.ndarray | None = None
+    cnt_C_host: np.ndarray | None = None
+    cnt_mask: np.ndarray | None = None
+    cnt_base: jnp.ndarray | None = None
     extractor: PathExtractor | None = None  # edge/production index cache
+    # packed all-path enumeration index over the Boolean closure state;
+    # invalidated whenever T_host changes (closure run or delta)
+    deriv: DerivationIndex | None = None
     # witness memo keyed (start, i, j): valid as long as the graph and the
     # frozen annotations are — i.e. until the next ingested delta (warm
     # closure runs only add entries, they never rewrite frozen ones)
@@ -157,8 +183,10 @@ class _GrammarState:
     # a just-evicted sharded state) — and which backend last served it.
     placement: str = "none"
     sp_placement: str = "none"
+    cnt_placement: str = "none"
     served_by: str = ""
     sp_served_by: str = ""
+    cnt_served_by: str = ""
 
 
 class QueryEngine:
@@ -309,6 +337,8 @@ class QueryEngine:
                 batch = [queries[i] for i in qidx]
                 if semantics == "single_path":
                     outs = self._serve_single_path(state, batch)
+                elif semantics == "count":
+                    outs = self._serve_count(state, batch)
                 else:  # relational and conjunctive share the bool-state path
                     outs = self._serve_relational(
                         state, batch, semantics=semantics
@@ -370,6 +400,7 @@ class QueryEngine:
                 plan = plan_repair(g, delta, self.n)
                 for state in self._states.values():
                     state.extractor = None  # edge indices are stale
+                    state.deriv = None  # packed closure index too
                     state.sp_paths.clear()  # memoized witnesses may walk them
 
                     if isinstance(state.tables, ConjunctiveTables):
@@ -448,6 +479,12 @@ class QueryEngine:
                         state.sp_mask = sp_mask
                         state.sp_placement = placement_of(L_dev)
                         stats.merge(st)
+                    if state.cnt_C is not None and state.cnt_mask is not None:
+                        # counting states have their own delta contract
+                        # (DELTA.md#count-states): insert-only = recount
+                        # affected rows from the new base, any delete =
+                        # full drop
+                        self._repair_count(state, delta, plan, stats)
                 dsp.set(**stats.as_dict())
             self.metrics.observe_delta(stats)
         self._version = g.version
@@ -522,6 +559,64 @@ class QueryEngine:
         state.mask = mask
         state.placement = placement_of(state_dev)
 
+    def _repair_count(
+        self, state: _GrammarState, delta, plan, stats: DeltaStats
+    ) -> None:
+        """Apply one delta to a cached counting state (the count side of
+        the delta contract, DELTA.md#count-states).
+
+        **Any deletion drops the whole state.**  A deletion can retract
+        counts anywhere in the blast radius and there is no subtractive
+        inverse in the saturating semiring (a saturated entry forgets how
+        much of it the deleted edge carried), so the row-repair machinery
+        has nothing sound to freeze against.  The state recounts from
+        scratch on next touch.
+
+        **Insert-only deltas recount affected rows.**  The Boolean warm
+        re-seed (OR the new base edges into cached rows, re-close) is
+        unsound for counts — a count row is a *sum*, not a set, so
+        folding new base entries into already-accumulated counts double
+        counts every path that existed before the delta.  Instead:
+        rebuild the base tensor, reset every affected cached row to its
+        new base row, and re-enter the masked counting closure seeded
+        with those rows.  Unaffected mask rows cannot reach an inserted
+        edge, so their counts are provably unchanged and they re-enter
+        the fixpoint as exact, Jacobi-stable context.
+        """
+        if delta.deleted:
+            stats.rows_evicted += int(np.asarray(state.cnt_mask).sum())
+            stats.count_drops += 1
+            state.cnt_C = state.cnt_C_host = state.cnt_mask = None
+            state.cnt_base = None
+            state.cnt_placement = "none"
+            state.cnt_served_by = ""
+            return
+        mask = np.array(state.cnt_mask, copy=True)
+        state.cnt_base = count_base(self.graph, state.grammar, pad_to=self.n)
+        C_dev = localize_state(state.cnt_C)
+        reset = (plan.affected & mask) | plan.ins_sources
+        if reset.any():
+            idx = np.nonzero(reset)[0]
+            rows = count_base_rows(
+                self.graph, state.grammar, idx, pad_to=self.n
+            )
+            jidx = jnp.asarray(idx.astype(np.int32))
+            C_dev = C_dev.at[:, jidx, :].set(jnp.asarray(rows))
+            d = self._decide(state, reset, reset, "count", "warm")
+            state.cnt_served_by = d.engine
+            C_dev, M, calls, _ = self._run_fixpoint(
+                state.tables, C_dev, reset,
+                semantics="count", decision=d, cnt_base=state.cnt_base,
+            )
+            mask |= M
+            stats.rows_repaired += int(np.asarray(M).sum())
+            stats.repair_iters += calls
+            stats.count_repairs += 1
+        state.cnt_C = C_dev
+        state.cnt_C_host = np.asarray(C_dev)
+        state.cnt_mask = mask
+        state.cnt_placement = placement_of(C_dev)
+
     # ------------------------------------------------------------------ #
     def _check_graph(self) -> None:
         """Reconcile with the graph: logged edits repair row-wise; any edit
@@ -576,7 +671,9 @@ class QueryEngine:
         validates every member; admission layers (repro.serve) call this
         per query at submit time so one bad request is rejected at its
         caller instead of failing the whole coalesced batch."""
-        if q.semantics not in ("relational", "single_path", "conjunctive"):
+        if q.semantics not in (
+            "relational", "single_path", "conjunctive", "count"
+        ):
             raise ValueError(f"unknown semantics {q.semantics!r}")
         conj_grammar = isinstance(q.grammar, ConjunctiveGrammar)
         if conj_grammar != (q.semantics == "conjunctive"):
@@ -636,7 +733,12 @@ class QueryEngine:
         graph density, grammar size, the cached state's temperature and
         placement, and whether a mesh is available.
         """
-        single_path = semantics == "single_path"
+        if semantics == "single_path":
+            placement = state.sp_placement
+        elif semantics == "count":
+            placement = state.cnt_placement
+        else:
+            placement = state.placement
         tables = state.tables
         f = PlanFeatures(
             n=self.n,
@@ -648,7 +750,7 @@ class QueryEngine:
             semantics=semantics,
             repair=repair,
             cache=cache,
-            placement=state.sp_placement if single_path else state.placement,
+            placement=placement,
             mesh_devices=(
                 int(self.mesh.devices.size) if self.mesh is not None else 0
             ),
@@ -673,6 +775,7 @@ class QueryEngine:
         frozen: np.ndarray | None = None,
         semantics: str = "relational",
         decision: PlanDecision | None = None,
+        cnt_base=None,
     ):
         """Run the masked closure to completion from ``seed`` rows, growing
         the capacity bucket on overflow (monotone warm restarts, so no work
@@ -722,6 +825,8 @@ class QueryEngine:
             eng_name = sp_engine_name(decision.engine, repair=repair)
         elif semantics == "conjunctive":
             eng_name = conj_engine_name(decision.engine)
+        elif semantics == "count":
+            eng_name = count_engine_name(decision.engine)
         elif repair:
             eng_name = repair_engine_name(decision.engine)
         else:
@@ -792,6 +897,10 @@ class QueryEngine:
                 ):
                     if repair:
                         T, M, overflow = exe(T, jnp.asarray(mask), frozen_dev)
+                    elif semantics == "count":
+                        # counting executables take the base tensor as an
+                        # extra operand (the Jacobi recompute re-adds it)
+                        T, M, overflow = exe(T, cnt_base, jnp.asarray(mask))
                     else:
                         T, M, overflow = exe(T, jnp.asarray(mask))
                     calls += 1
@@ -824,6 +933,8 @@ class QueryEngine:
                             eng_name = sp_engine_name(fb, repair=False)
                         elif semantics == "conjunctive":
                             eng_name = conj_engine_name(fb)
+                        elif semantics == "count":
+                            eng_name = count_engine_name(fb)
                         else:
                             eng_name = fb
                         mesh_k = (
@@ -867,18 +978,28 @@ class QueryEngine:
         ``(cache_status, decision, fallback_event)`` — the latter two are
         None on a pure cache hit (no closure ran, nothing was planned)."""
         single_path = semantics == "single_path"
+        count = semantics == "count"
         need = self._need_mask(batch)
         if need is None:
             need = np.ones(self.n, dtype=bool)
             need[self.graph.n_nodes :] = False  # padding rows are empty
-        mask = state.sp_mask if single_path else state.mask
-        cur = state.sp_L if single_path else state.T
+        if single_path:
+            mask, cur = state.sp_mask, state.sp_L
+        elif count:
+            mask, cur = state.cnt_mask, state.cnt_C
+        else:
+            mask, cur = state.mask, state.T
         if mask is not None and (need <= mask).all():
             return "hit", None, None
         status = "miss" if cur is None else "warm"
         if cur is None:
             if semantics == "conjunctive":
                 cur = conj_init_matrix(self.graph, state.grammar, pad_to=self.n)
+            elif count:
+                state.cnt_base = count_base(
+                    self.graph, state.grammar, pad_to=self.n
+                )
+                cur = state.cnt_base
             else:
                 cur = init_matrix(self.graph, state.grammar, pad_to=self.n)
                 if single_path:
@@ -895,16 +1016,23 @@ class QueryEngine:
         out, M, _, fb = self._run_fixpoint(
             state.tables, cur, mask | need, semantics=semantics,
             decision=decision,
+            cnt_base=state.cnt_base if count else None,
         )
         served = fb["to"] if fb else decision.engine
         if single_path:
             state.sp_L, state.sp_L_host, state.sp_mask = out, np.asarray(out), M
             state.sp_placement = placement_of(out)
             state.sp_served_by = served
+        elif count:
+            state.cnt_C, state.cnt_C_host = out, np.asarray(out)
+            state.cnt_mask = M
+            state.cnt_placement = placement_of(out)
+            state.cnt_served_by = served
         else:
             state.T, state.T_host, state.mask = out, np.asarray(out), M
             state.placement = placement_of(out)
             state.served_by = served
+            state.deriv = None  # packed index is a view of stale T_host
             if served == "blocksparse":
                 self.metrics.observe_blocksparse(
                     occupied_block_count(state.T_host, self.config.tile)
@@ -954,6 +1082,89 @@ class QueryEngine:
                 pairs |= {(m, m) for m in rows}  # empty path m pi m
             outs.append(QueryResult(q, pairs, None, stats.copy()))
         return outs
+
+    def _serve_count(
+        self, state: _GrammarState, batch: list[Query]
+    ) -> list[QueryResult]:
+        """Serve a counting batch: identical caching/slicing over the
+        (N, n, n) uint32 state (plan.COUNT_ENGINES underneath).  Counts
+        are exact below :data:`~repro.core.semantics.SAT_COUNT`; the
+        sentinel means "at least that many paths"."""
+        t0 = time.perf_counter()
+        status, decision, fb = self._ensure_rows(
+            state, batch, semantics="count"
+        )
+        latency = time.perf_counter() - t0
+        nn = self.graph.n_nodes
+        C = state.cnt_C_host
+        active = int(state.cnt_mask.sum())
+        self.metrics.observe_count_state(active)
+        stats = QueryStats(
+            latency_s=latency,
+            cache=status,
+            engine=state.cnt_served_by or self.engine,
+            semantics="count",
+            batched_with=len(batch),
+            active_rows=active,
+            epoch=self.clock.epoch,
+            planner=decision.to_dict() if decision is not None else None,
+            fallback=fb,
+        )
+        stats.update(self.delta_stats.as_dict())
+        stats.update(self.plans.stats.as_dict())
+        sat = int(SAT_COUNT)
+        outs = []
+        for q in batch:
+            a0 = state.grammar.index_of(q.start)
+            rows = range(nn) if q.sources is None else q.sources
+            pairs: set[tuple[int, int]] = set()
+            counts: dict[tuple[int, int], int] = {}
+            for i in rows:
+                row = C[a0, i, :nn]
+                for j in np.nonzero(row)[0]:
+                    pairs.add((i, int(j)))
+                    counts[(i, int(j))] = int(row[j])
+            if q.start in state.grammar.nullable:
+                for m in rows:  # empty path m pi m is one more path
+                    c = counts.get((m, m), 0)
+                    counts[(m, m)] = c + 1 if c < sat else sat
+                    pairs.add((m, m))
+            outs.append(
+                QueryResult(q, pairs, None, stats.copy(), counts=counts)
+            )
+        return outs
+
+    def extract_paths(
+        self,
+        grammar: CNFGrammar,
+        start: str,
+        m: int,
+        n: int,
+        k: int = 10,
+        max_len: int = 16,
+    ) -> list[list[tuple[int, str, int]]]:
+        """Up to ``k`` distinct paths ``m ->* n`` derivable from ``start``,
+        each of length <= ``max_len`` (bounded all-path enumeration,
+        :class:`~repro.core.semantics.DerivationIndex`).
+
+        Materializes Boolean closure rows for source ``m`` through the
+        ordinary relational cache, then enumerates over the packed
+        derivation index — which is cached on the grammar state and
+        rebuilt only when the closure state changes (new rows
+        materialized, or a delta ingested)."""
+        with self._lock:
+            self._check_graph()
+            q = Query(grammar, start, sources=(m,))
+            self.validate_query(q)
+            if not 0 <= n < self.graph.n_nodes:
+                raise ValueError(f"target {n} outside graph")
+            state = self._state_for(grammar_key(grammar), grammar)
+            self._ensure_rows(state, [q])
+            if state.deriv is None:
+                state.deriv = DerivationIndex(
+                    state.T_host, self.graph, grammar
+                )
+            return state.deriv.extract_paths(start, m, n, k, max_len)
 
     def _serve_single_path(
         self, state: _GrammarState, batch: list[Query]

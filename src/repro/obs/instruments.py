@@ -159,6 +159,22 @@ class EngineMetrics(_Bundle):
             "Fixpoint iterations spent in delta repair closures",
             registry=registry,
         )
+        self.delta_count_repairs = Counter(
+            "delta_count_repairs_total",
+            "Counting states repaired by insert-only recount "
+            "(DELTA.md#count-states)",
+            registry=registry,
+        )
+        self.delta_count_drops = Counter(
+            "delta_count_drops_total",
+            "Counting states dropped whole by a deletion delta",
+            registry=registry,
+        )
+        self.count_active_rows = Gauge(
+            "count_state_active_rows",
+            "Materialized mask rows of the last count-served closure state",
+            registry=registry,
+        )
         self.delta_epoch = Gauge(
             "delta_epoch", "Current graph epoch of the engine",
             registry=registry,
@@ -189,6 +205,12 @@ class EngineMetrics(_Bundle):
         self.delta_rows_repaired.inc(stats.rows_repaired)
         self.delta_rows_evicted.inc(stats.rows_evicted)
         self.delta_repair_iters.inc(stats.repair_iters)
+        self.delta_count_repairs.inc(stats.count_repairs)
+        self.delta_count_drops.inc(stats.count_drops)
+
+    def observe_count_state(self, active_rows: int) -> None:
+        """Record the mask size of a just-served counting state."""
+        self.count_active_rows.set(float(active_rows))
 
     def observe_blocksparse(self, occupied: int) -> None:
         """Record the occupied-block count of a blocksparse-served state."""

@@ -17,11 +17,16 @@ Conventions (mirroring Prometheus):
   client idiom, but every constructor takes ``registry=`` so tests and
   benchmarks can isolate their own.
 
-Thread-safety: increments hold no lock — CPython's atomic attribute
-stores are sufficient for the single-writer pattern used here (the serve
-loop's engine lock already serializes closure-side writers), and a torn
-read in an exposition scrape only mis-times a sample, never corrupts
-state.  Child *creation* takes the registry lock since it mutates maps.
+Thread-safety: every child carries its own pre-allocated
+``threading.Lock`` and takes it for the read-modify-write increments
+(``self.value += x`` is NOT atomic in CPython — it is a load, an add and
+a store, and the serve loop feeds the same children from both the event
+loop and the engine executor thread, so lock-free increments lose
+updates under contention).  The lock is created once at child creation,
+so the hot path stays allocation-free; exposition scrapes read without
+the lock — a torn multi-field histogram read only mis-times a sample,
+never corrupts state.  Child *creation* takes the family lock since it
+mutates maps.
 """
 from __future__ import annotations
 
@@ -47,10 +52,11 @@ def _label_key(labels: dict) -> tuple:
 class _Child:
     """Base for one labeled series of a family."""
 
-    __slots__ = ("labels",)
+    __slots__ = ("labels", "_lock")
 
     def __init__(self, labels: dict) -> None:
         self.labels = labels
+        self._lock = threading.Lock()
 
 
 class _CounterChild(_Child):
@@ -63,7 +69,8 @@ class _CounterChild(_Child):
     def inc(self, amount: float = 1.0) -> None:
         if amount < 0:
             raise ValueError("counters only go up")
-        self.value += amount
+        with self._lock:
+            self.value += amount
 
 
 class _GaugeChild(_Child):
@@ -74,13 +81,16 @@ class _GaugeChild(_Child):
         self.value = 0.0
 
     def set(self, value: float) -> None:
-        self.value = float(value)
+        with self._lock:
+            self.value = float(value)
 
     def inc(self, amount: float = 1.0) -> None:
-        self.value += amount
+        with self._lock:
+            self.value += amount
 
     def dec(self, amount: float = 1.0) -> None:
-        self.value -= amount
+        with self._lock:
+            self.value -= amount
 
 
 class _HistogramChild(_Child):
@@ -95,9 +105,11 @@ class _HistogramChild(_Child):
         self.count = 0
 
     def observe(self, value: float) -> None:
-        self.counts[bisect.bisect_left(self.bounds, value)] += 1
-        self.sum += value
-        self.count += 1
+        slot = bisect.bisect_left(self.bounds, value)
+        with self._lock:
+            self.counts[slot] += 1
+            self.sum += value
+            self.count += 1
 
     def cumulative(self) -> list:
         """Per-bucket cumulative counts (Prometheus ``le`` semantics)."""

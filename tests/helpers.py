@@ -168,12 +168,22 @@ def power_law_graph(
     ranks = np.arange(1, n_nodes + 1, dtype=np.float64)
     p = ranks**-exponent
     p /= p.sum()
-    src = rng.choice(n_nodes, size=n_edges, p=p)
-    dst = rng.choice(n_nodes, size=n_edges, p=p)
-    lab = rng.integers(0, len(labels), size=n_edges)
-    edges = [
-        (int(i), labels[int(k)], int(j)) for i, j, k in zip(src, dst, lab)
-    ]
+    # draw in rounds until n_edges DISTINCT edges accumulate — Graph
+    # collapses duplicates, and hub-heavy sampling collides often, so a
+    # single draw of size n_edges would under-deliver (feature skew)
+    target = min(n_edges, n_nodes * n_nodes * len(labels))
+    seen: set = set()
+    edges = []
+    while len(edges) < target:
+        need = target - len(edges)
+        src = rng.choice(n_nodes, size=need, p=p)
+        dst = rng.choice(n_nodes, size=need, p=p)
+        lab = rng.integers(0, len(labels), size=need)
+        for i, j, k in zip(src, dst, lab):
+            e = (int(i), labels[int(k)], int(j))
+            if e not in seen:
+                seen.add(e)
+                edges.append(e)
     return Graph(n_nodes, edges)
 
 

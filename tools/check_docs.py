@@ -49,9 +49,10 @@ REQUIRED_ANCHORS: dict[str, list[str]] = {
         "cache-semantics",
         "semantics",
         "conjunctive",
+        "counting--all-paths",
     ],
     "ARCHITECTURE.md": ["quickstart", "the-stack"],
-    "DELTA.md": ["conjunctive-states"],
+    "DELTA.md": ["conjunctive-states", "count-states"],
     "OBSERVABILITY.md": [
         "span-taxonomy",
         "iteration-events",
